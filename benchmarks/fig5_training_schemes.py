@@ -1,0 +1,81 @@
+"""Paper Fig. 5: training schemes — No-Fine-tune vs SurveilEdge vs
+All-Fine-tune (accuracy + wall-clock training time, normalized)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import finetune as FT
+from repro.data import synthetic_video as SV
+from repro.models import meta as M
+from repro.serving.workload import _binary_batches
+
+
+def run(verbose: bool = True, steps: int = 60):
+    full = get_config("surveiledge-cls")
+    cfg = dataclasses.replace(full.edge_variant(), num_query_classes=2,
+                              vocab_size=full.vocab_size)
+    rng = np.random.default_rng(0)
+    cams = SV.make_cameras(4, seed=0)
+    profile = np.mean([c.class_mix for c in cams], axis=0)
+    key = jax.random.PRNGKey(0)
+
+    # 'pre-trained' backbone: generic multi-class pretraining (ImageNet analogue)
+    def pretrain_iter():
+        r = np.random.default_rng(1)
+        while True:
+            cls = r.integers(0, SV.NUM_CLASSES, size=64)
+            tokens, labels = SV.labeled_crop_batch(cls, r, cfg.vocab_size)
+            import jax.numpy as jnp
+            yield jnp.asarray(tokens), jnp.asarray(
+                (labels == SV.QUERY_CLASS).astype(np.int32))
+
+    pre = M.init_params(cfg, key)
+    pre = FT.finetune(cfg, pre, pretrain_iter(), steps=20, lr=1e-3).params
+
+    ev = next(_binary_batches(np.random.default_rng(99), cfg, profile, None,
+                              SV.QUERY_CLASS, batch=256))
+
+    results = {}
+    r_no = FT.run_scheme("no_finetune", cfg, pre, None, None, ev)
+    results["no_finetune"] = {"accuracy": r_no[-1].accuracy, "train_s": 0.0}
+
+    it_fn = lambda: _binary_batches(np.random.default_rng(2), cfg, profile,
+                                    None, SV.QUERY_CLASS)
+    r_se = FT.run_scheme("surveiledge", cfg, pre, it_fn, None, ev)
+    results["surveiledge"] = {"accuracy": r_se[-1].accuracy,
+                              "train_s": r_se[-1].train_seconds}
+
+    cam_fns = {c.cam_id: (lambda cid=c.cam_id: _binary_batches(
+        np.random.default_rng(10 + cid), cfg,
+        cams[cid].class_mix, None, SV.QUERY_CLASS)) for c in cams}
+    r_all = FT.run_scheme("all_finetune", cfg, pre, it_fn, cam_fns, ev)
+    total_s = sum(r.train_seconds for r in r_all.values())
+    acc = float(np.mean([r.accuracy for r in r_all.values()]))
+    results["all_finetune"] = {"accuracy": acc, "train_s": total_s}
+
+    if verbose:
+        print("\n== Fig. 5 — training schemes ==")
+        tmax = max(r["train_s"] for r in results.values()) or 1.0
+        for k, v in results.items():
+            print(f"{k:16s} accuracy={v['accuracy']:.3f} "
+                  f"train_s={v['train_s']:.2f} (norm {v['train_s']/tmax:.2f})")
+    derived = {
+        "speedup_vs_all_finetune":
+            results["all_finetune"]["train_s"] /
+            max(results["surveiledge"]["train_s"], 1e-9),
+        "acc_gap_to_all_finetune":
+            results["all_finetune"]["accuracy"] -
+            results["surveiledge"]["accuracy"],
+        "acc_gain_vs_no_finetune":
+            results["surveiledge"]["accuracy"] -
+            results["no_finetune"]["accuracy"],
+    }
+    return results, derived
+
+
+if __name__ == "__main__":
+    print(run()[1])

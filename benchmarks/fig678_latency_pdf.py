@@ -1,0 +1,46 @@
+"""Paper Figs. 6-8: per-frame latency distributions (PDF + variance) under
+the three cluster settings; shows the allocator's variance reduction."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+
+
+def _pdf_stats(latencies: np.ndarray, bins: int = 20):
+    hist, edges = np.histogram(latencies, bins=bins, density=True)
+    return {"mean": float(np.mean(latencies)),
+            "var": float(np.var(latencies)),
+            "p50": float(np.percentile(latencies, 50)),
+            "p99": float(np.percentile(latencies, 99)),
+            "mode_bin": float(edges[int(np.argmax(hist))])}
+
+
+def run(verbose: bool = True):
+    wl = common.shared_workload()
+    settings = {
+        "single (fig6)": [1.0],
+        "homogeneous (fig7)": [1.0, 1.0, 1.0],
+        "heterogeneous (fig8)": [1.0, 0.5, 0.25],
+    }
+    out = {}
+    for name, speeds in settings.items():
+        rows = common.run_schemes(wl, edge_service=speeds, seed=21)
+        out[name] = {s: _pdf_stats(rows[s]["_result"].latencies)
+                     for s in common.SCHEMES}
+        if verbose:
+            print(f"\n== latency PDFs — {name} ==")
+            for s in common.SCHEMES:
+                st = out[name][s]
+                print(f"{s:20s} mean={st['mean']:7.3f} var={st['var']:9.3f} "
+                      f"p50={st['p50']:7.3f} p99={st['p99']:8.3f}")
+    derived = {
+        f"var_reduction_vs_fixed[{k}]":
+            v["surveiledge_fixed"]["var"] / max(v["surveiledge"]["var"], 1e-9)
+        for k, v in out.items()
+    }
+    return out, derived
+
+
+if __name__ == "__main__":
+    print(run()[1])

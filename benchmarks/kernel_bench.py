@@ -1,0 +1,72 @@
+"""Kernel microbenchmarks: Pallas (interpret on CPU) vs pure-jnp oracle.
+
+On this CPU host the interesting number is the *oracle* timing (the Pallas
+path interprets the kernel body in Python and is not representative of TPU
+throughput); both are reported, with bytes-based derived throughput.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def _time(fn, *args, n=10, **kw):
+    fn(*args, **kw)
+    r = fn(*args, **kw)
+    jax.tree.map(lambda a: a.block_until_ready()
+                 if hasattr(a, "block_until_ready") else a, r)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        r = fn(*args, **kw)
+    jax.tree.map(lambda a: a.block_until_ready()
+                 if hasattr(a, "block_until_ready") else a, r)
+    return (time.perf_counter() - t0) / n * 1e6     # us
+
+
+def run(verbose: bool = True):
+    B, H, W = 4, 96, 128
+    f = [jax.random.randint(jax.random.PRNGKey(i), (B, H, W, 3), 0, 256)
+         for i in range(3)]
+    mask = ops.framediff(*f, threshold=40, use_pallas=False)
+    conf = jax.random.uniform(jax.random.PRNGKey(9), (4096,))
+    rows = []
+    bytes_fd = 3 * B * H * W * 3 * 4
+    rows.append(("framediff_ref", _time(ops.framediff, *f, threshold=40,
+                                        use_pallas=False), bytes_fd))
+    rows.append(("framediff_pallas_interp", _time(ops.framediff, *f,
+                                                  threshold=40), bytes_fd))
+    bytes_mo = B * H * W * 4 * 2
+    rows.append(("dilate3x3_ref", _time(ops.dilate3x3, mask,
+                                        use_pallas=False), bytes_mo))
+    rows.append(("dilate3x3_pallas_interp", _time(ops.dilate3x3, mask), bytes_mo))
+    rows.append(("erode3x3_ref", _time(ops.erode3x3, mask,
+                                       use_pallas=False), bytes_mo))
+    bytes_tr = 4096 * 4 * 3
+    rows.append(("triage_ref", _time(ops.triage, conf, alpha=0.8, beta=0.1,
+                                     capacity=512, use_pallas=False), bytes_tr))
+    rows.append(("triage_pallas_interp", _time(ops.triage, conf, alpha=0.8,
+                                               beta=0.1, capacity=512), bytes_tr))
+    # flash attention (small shape; interpret mode on CPU)
+    qk = jax.random.normal(jax.random.PRNGKey(3), (1, 4, 128, 64))
+    kk = jax.random.normal(jax.random.PRNGKey(4), (1, 2, 128, 64))
+    vk = jax.random.normal(jax.random.PRNGKey(5), (1, 2, 128, 64))
+    bytes_fl = (qk.size + kk.size + vk.size) * 4
+    rows.append(("flash_attn_ref", _time(ops.flash_attention, qk, kk, vk,
+                                         use_pallas=False, n=5), bytes_fl))
+    rows.append(("flash_attn_pallas_interp",
+                 _time(ops.flash_attention, qk, kk, vk, n=5), bytes_fl))
+    out = {}
+    for name, us, nbytes in rows:
+        gbps = nbytes / (us * 1e-6) / 1e9
+        out[name] = {"us_per_call": round(us, 1), "GB_s": round(gbps, 3)}
+        if verbose:
+            print(f"{name:28s} {us:10.1f} us  {gbps:8.3f} GB/s")
+    return out, {}
+
+
+if __name__ == "__main__":
+    run()

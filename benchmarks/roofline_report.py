@@ -1,0 +1,63 @@
+"""Roofline table (deliverable g): all 40 (arch x shape) pairs, single-pod,
+from the dry-run artifacts in experiments/dryrun + the analytic model."""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs import ASSIGNED, get_config
+from repro.configs.shapes import INPUT_SHAPES
+from repro.launch import roofline as R
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments")
+
+
+def run(verbose: bool = True, dryrun_dir: str = None):
+    dryrun_dir = dryrun_dir or os.path.join(OUT_DIR, "dryrun")
+    rows = []
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        for sname, shape in INPUT_SHAPES.items():
+            rec = R.load_dryrun(dryrun_dir, arch, sname, "single")
+            rl = R.analyze(cfg, shape, dryrun_record=rec)
+            rows.append(rl)
+    if verbose:
+        hdr = (f"{'arch':26s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+               f"{'collect_s':>10s} {'dominant':>10s} {'useful':>7s}")
+        print("\n== Roofline (single-pod 16x16, v5e) ==")
+        print(hdr)
+        for r in rows:
+            print(f"{r.arch:26s} {r.shape:12s} {r.compute_s:10.4f} "
+                  f"{r.memory_s:10.4f} {r.collective_s:10.4f} "
+                  f"{r.dominant:>10s} {r.useful_ratio:7.2f}")
+    # multi-pod rows for the three hillclimbed pairs (512 chips; the pod
+    # axis joins data-parallel batch sharding)
+    multi_pairs = [("command-r-35b", "train_4k"),
+                   ("granite-moe-1b-a400m", "prefill_32k"),
+                   ("phi3.5-moe-42b-a6.6b", "decode_32k")]
+    multi_rows = []
+    for arch, sname in multi_pairs:
+        rec = R.load_dryrun(dryrun_dir, arch, sname, "multi")
+        rl = R.analyze(get_config(arch), INPUT_SHAPES[sname], chips=512,
+                       mesh_name="multi", dryrun_record=rec)
+        multi_rows.append(rl)
+    if verbose:
+        print("\n== Roofline (multi-pod 2x16x16, hillclimbed pairs) ==")
+        for r in multi_rows:
+            print(f"{r.arch:26s} {r.shape:12s} {r.compute_s:10.4f} "
+                  f"{r.memory_s:10.4f} {r.collective_s:10.4f} "
+                  f"{r.dominant:>10s} {r.useful_ratio:7.2f}")
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, "roofline.json"), "w") as f:
+        json.dump([r.__dict__ | {"dominant": r.dominant,
+                                 "useful_ratio": r.useful_ratio}
+                   for r in rows + multi_rows], f, indent=1)
+    worst = max(rows, key=lambda r: max(r.compute_s, r.memory_s, r.collective_s))
+    most_coll = max(rows, key=lambda r: r.collective_s)
+    derived = {"worst_pair": f"{worst.arch}/{worst.shape}",
+               "most_collective_bound": f"{most_coll.arch}/{most_coll.shape}"}
+    return rows, derived
+
+
+if __name__ == "__main__":
+    print(run()[1])

@@ -1,0 +1,24 @@
+"""Paper Table II: single edge + cloud, four query schemes."""
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def run(verbose: bool = True):
+    wl = common.shared_workload()
+    rows = common.run_schemes(wl, edge_service=[1.0], seed=11)
+    if verbose:
+        common.print_table("Table II — single edge + cloud", rows)
+    se, co, eo = rows["surveiledge"], rows["cloud_only"], rows["edge_only"]
+    derived = {
+        "bandwidth_reduction_vs_cloud": co["bandwidth_MB"] / max(se["bandwidth_MB"], 1e-9),
+        "speedup_vs_cloud": co["avg_latency_s"] / max(se["avg_latency_s"], 1e-9),
+        "speedup_vs_edge": eo["avg_latency_s"] / max(se["avg_latency_s"], 1e-9),
+        "accuracy_gain_vs_edge": se["accuracy_F2"] - eo["accuracy_F2"],
+    }
+    return rows, derived
+
+
+if __name__ == "__main__":
+    _, derived = run()
+    print(derived)

@@ -1,0 +1,26 @@
+"""Paper Table III: three homogeneous edges + cloud."""
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def run(verbose: bool = True):
+    wl = common.shared_workload()
+    rows = common.run_schemes(wl, edge_service=[1.0, 1.0, 1.0], seed=12)
+    if verbose:
+        common.print_table("Table III — homogeneous edges + cloud", rows)
+    se, co, eo, fx = (rows[s] for s in
+                      ("surveiledge", "cloud_only", "edge_only",
+                       "surveiledge_fixed"))
+    derived = {
+        "bandwidth_reduction_vs_cloud": co["bandwidth_MB"] / max(se["bandwidth_MB"], 1e-9),
+        "speedup_vs_cloud": co["avg_latency_s"] / max(se["avg_latency_s"], 1e-9),
+        "speedup_vs_edge": eo["avg_latency_s"] / max(se["avg_latency_s"], 1e-9),
+        "speedup_vs_fixed": fx["avg_latency_s"] / max(se["avg_latency_s"], 1e-9),
+    }
+    return rows, derived
+
+
+if __name__ == "__main__":
+    _, derived = run()
+    print(derived)

@@ -1,0 +1,28 @@
+"""Paper Table IV: heterogeneous edges (2/4/8-core analogues) + cloud."""
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def run(verbose: bool = True):
+    wl = common.shared_workload()
+    # 2, 4, 8 logical cores -> 1.0 / 0.5 / 0.25 x per-item service time
+    rows = common.run_schemes(wl, edge_service=[1.0, 0.5, 0.25], seed=13)
+    if verbose:
+        common.print_table("Table IV — heterogeneous edges + cloud", rows)
+    se, co, eo, fx = (rows[s] for s in
+                      ("surveiledge", "cloud_only", "edge_only",
+                       "surveiledge_fixed"))
+    derived = {
+        "speedup_vs_cloud": co["avg_latency_s"] / max(se["avg_latency_s"], 1e-9),
+        "speedup_vs_edge": eo["avg_latency_s"] / max(se["avg_latency_s"], 1e-9),
+        "speedup_vs_fixed": fx["avg_latency_s"] / max(se["avg_latency_s"], 1e-9),
+        "accuracy_gain_vs_edge": se["accuracy_F2"] - eo["accuracy_F2"],
+        "accuracy_gain_vs_fixed": se["accuracy_F2"] - fx["accuracy_F2"],
+    }
+    return rows, derived
+
+
+if __name__ == "__main__":
+    _, derived = run()
+    print(derived)

@@ -1,0 +1,59 @@
+"""Cascade speculative decoding demo (beyond-paper, see core/speculative.py).
+
+SurveilEdge's confidence cascade, applied per token: the edge CQ-style draft
+model proposes k tokens, the cloud model verifies them in batch and accepts
+the agreeing prefix — output is provably identical to cloud-only greedy
+decoding, but the cloud steps ~tokens_per_cloud_step times less often.
+
+  PYTHONPATH=src python examples/speculative_serving.py --steps 16 --k 4
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import speculative as SP
+from repro.models import meta
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--steps", type=int, default=16)
+    ap.add_argument("--k", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    args = ap.parse_args()
+
+    cloud_cfg = get_config(args.arch).reduced()
+    edge_cfg = get_config(args.arch).edge_variant()
+    cloud = meta.init_params(cloud_cfg, jax.random.PRNGKey(0))
+    edge = meta.init_params(edge_cfg, jax.random.PRNGKey(1))
+    prompt = jax.random.randint(jax.random.PRNGKey(2), (1, args.prompt_len),
+                                0, cloud_cfg.vocab_size)
+
+    t0 = time.perf_counter()
+    want = SP.cloud_greedy_generate(cloud_cfg, cloud, prompt, args.steps)
+    t_ref = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    got, stats = SP.speculative_generate(edge_cfg, edge, cloud_cfg, cloud,
+                                         prompt, steps=args.steps, k=args.k)
+    t_spec = time.perf_counter() - t0
+
+    identical = bool(np.array_equal(np.asarray(got), np.asarray(want)))
+    print(f"output identical to cloud-greedy: {identical}")
+    print(f"draft acceptance rate : {stats.acceptance_rate:.1%}")
+    print(f"tokens per cloud round: {stats.tokens_per_cloud_step:.2f}")
+    print(f"(host wall-times here include re-prefill bookkeeping; the "
+          f"roofline win is the {stats.tokens_per_cloud_step:.1f}x fewer "
+          f"cloud decode rounds)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Sharding-aware checkpointing (npz-based, no external deps).
+
+Saves a param/opt tree as flat npz entries keyed by tree path; restore
+re-builds the tree and (optionally) device_put's each leaf with the sharding
+tree.  Works for TrainState and raw param trees.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return {jax.tree_util.keystr(path): leaf for path, leaf in leaves}, treedef
+
+
+def save(path: str, tree: Any, step: Optional[int] = None) -> None:
+    flat, _ = _flatten(tree)
+    arrays = {k: np.asarray(v) for k, v in flat.items()}
+    if step is not None:
+        arrays["__step__"] = np.asarray(step)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    tmp = path + ".tmp.npz"
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, path)
+
+
+def restore(path: str, like: Any, shardings: Any = None) -> Any:
+    """Rebuild a tree shaped like ``like`` from ``path``.
+
+    ``shardings``: optional matching tree of NamedSharding for device_put.
+    """
+    with np.load(path) as data:
+        flat, treedef = _flatten(like)
+        leaves = []
+        for key, ref in flat.items():
+            arr = data[key]
+            assert arr.shape == tuple(ref.shape), (key, arr.shape, ref.shape)
+            leaves.append(arr.astype(ref.dtype))
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree.map(lambda a, s: jax.device_put(a, s), tree, shardings)
+    else:
+        tree = jax.tree.map(jnp.asarray, tree)
+    return tree
+
+
+def latest_step(path: str) -> Optional[int]:
+    if not os.path.exists(path):
+        return None
+    with np.load(path) as data:
+        if "__step__" in data:
+            return int(data["__step__"])
+    return None

@@ -1,0 +1,52 @@
+"""Architecture registry: one module per assigned architecture.
+
+Every config cites its source (hf:/arXiv:) and is selectable by id via
+``--arch <id>`` in the launchers.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+from repro.configs.phi35_moe_42b import CONFIG as _phi35
+from repro.configs.qwen15_05b import CONFIG as _qwen15
+from repro.configs.mamba2_27b import CONFIG as _mamba2
+from repro.configs.command_r_35b import CONFIG as _command_r
+from repro.configs.whisper_large_v3 import CONFIG as _whisper
+from repro.configs.hymba_15b import CONFIG as _hymba
+from repro.configs.chatglm3_6b import CONFIG as _chatglm3
+from repro.configs.granite_moe_1b import CONFIG as _granite
+from repro.configs.qwen3_8b import CONFIG as _qwen3
+from repro.configs.internvl2_1b import CONFIG as _internvl2
+from repro.configs.surveiledge_cnn import CONFIG as _surveiledge
+
+REGISTRY: Dict[str, ModelConfig] = {
+    c.name: c for c in [
+        _phi35, _qwen15, _mamba2, _command_r, _whisper, _hymba,
+        _chatglm3, _granite, _qwen3, _internvl2, _surveiledge,
+    ]
+}
+
+ASSIGNED: List[str] = [
+    "phi3.5-moe-42b-a6.6b",
+    "qwen1.5-0.5b",
+    "mamba2-2.7b",
+    "command-r-35b",
+    "whisper-large-v3",
+    "hymba-1.5b",
+    "chatglm3-6b",
+    "granite-moe-1b-a400m",
+    "qwen3-8b",
+    "internvl2-1b",
+]
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def list_archs() -> List[str]:
+    return list(ASSIGNED)

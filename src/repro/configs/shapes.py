@@ -1,0 +1,76 @@
+"""Assigned input shapes and ShapeDtypeStruct builders for the dry-run."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                  # 'train' | 'prefill' | 'decode'
+    # decode shapes: seq_len is the KV-cache/context length, one new token.
+
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+# long-context decode for attention archs uses a sliding window (sub-quadratic
+# requirement; see DESIGN.md §3).  SSM archs need no window.
+LONG_CONTEXT_WINDOW = 8192
+
+
+def shape_for(name: str) -> InputShape:
+    return INPUT_SHAPES[name]
+
+
+def decode_window(cfg: ModelConfig, shape: InputShape) -> Optional[int]:
+    """Effective attention window for a (cfg, shape) pair."""
+    if shape.name == "long_500k" and cfg.has_attn:
+        return LONG_CONTEXT_WINDOW
+    return cfg.sliding_window
+
+
+def attn_cache_len(cfg: ModelConfig, shape: InputShape) -> int:
+    w = decode_window(cfg, shape)
+    if w is not None:
+        return min(w, shape.seq_len)
+    return shape.seq_len
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape,
+                dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+    train:   tokens + labels (+ stub frontend embeddings)
+    prefill: tokens (+ stub frontend embeddings)
+    decode:  token + cache (built separately via make_cache(abstract=True))
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    s_text = S
+    if cfg.num_img_tokens > 0 and shape.kind != "decode":
+        s_text = S - cfg.num_img_tokens
+        specs["img_embeds"] = jax.ShapeDtypeStruct((B, cfg.num_img_tokens, 1024), dtype)
+    if cfg.is_encdec and shape.kind != "decode":
+        specs["audio_frames"] = jax.ShapeDtypeStruct((B, cfg.enc_seq, cfg.d_model), dtype)
+    if shape.kind == "train":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, s_text), i32)
+        specs["labels"] = jax.ShapeDtypeStruct((B, s_text), i32)
+    elif shape.kind == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, s_text), i32)
+    else:  # decode
+        specs["token"] = jax.ShapeDtypeStruct((B,), i32)
+    return specs

@@ -1,0 +1,101 @@
+"""Confidence-thresholded cloud-edge cascade (the paper's C1), in JAX.
+
+The edge (CQ-specific) model emits a confidence f = P(query object | image).
+Per item:
+    f > alpha          -> accept at the edge
+    f < beta           -> reject at the edge
+    beta <= f <= alpha -> escalate: re-classify with the cloud model
+
+``triage_and_compact`` is the batched, jit-able core: it routes a batch by
+thresholds and compacts the escalated subset into a fixed-capacity buffer
+(a requirement for fixed-shape XLA programs — and the hot-spot the Pallas
+``triage`` kernel implements).  ``CascadePair`` wires two models together.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+ACCEPT, REJECT, ESCALATE = 0, 1, 2
+
+
+def confidence_from_logits(logits: jax.Array,
+                           query_class: int = 1) -> jax.Array:
+    """(B, C) class logits -> (B,) P(query object)."""
+    return jax.nn.softmax(logits.astype(jnp.float32), axis=-1)[:, query_class]
+
+
+def triage(conf: jax.Array, alpha: jax.Array, beta: jax.Array) -> jax.Array:
+    """(B,) confidences -> (B,) route codes {ACCEPT, REJECT, ESCALATE}."""
+    return jnp.where(conf > alpha, ACCEPT,
+                     jnp.where(conf < beta, REJECT, ESCALATE)).astype(jnp.int32)
+
+
+def compact_escalated(routes: jax.Array, capacity: int
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Stable-compact indices of escalated items into a fixed buffer.
+
+    Returns (indices (capacity,) int32 — source index per slot, padded with
+    the first index; valid (capacity,) bool; n_escalated ()).
+    Overflowing items (beyond capacity) stay un-escalated — the adaptive
+    thresholds exist precisely to keep this rare.
+    """
+    esc = routes == ESCALATE
+    pos = jnp.cumsum(esc.astype(jnp.int32)) - 1          # slot per item
+    n = jnp.sum(esc.astype(jnp.int32))
+    slot = jnp.where(esc & (pos < capacity), pos, capacity)
+    idx = jnp.zeros((capacity + 1,), jnp.int32).at[slot].set(
+        jnp.arange(routes.shape[0], dtype=jnp.int32), mode="drop")[:capacity]
+    valid = jnp.arange(capacity) < jnp.minimum(n, capacity)
+    return idx, valid, n
+
+
+def cascade_batch(edge_conf: jax.Array,
+                  cloud_fn: Callable[[jax.Array], jax.Array],
+                  items: jax.Array,
+                  alpha: jax.Array, beta: jax.Array,
+                  capacity: int) -> Dict[str, jax.Array]:
+    """Pure-JAX cascade over one batch.
+
+    edge_conf: (B,) edge confidences; items: (B, ...) payloads to send to
+    ``cloud_fn`` (which maps (capacity, ...) -> (capacity,) confidences).
+    Returns dict with final decisions (B,), routes, and stats.
+    """
+    B = edge_conf.shape[0]
+    routes = triage(edge_conf, alpha, beta)
+    idx, valid, n_esc = compact_escalated(routes, capacity)
+    esc_items = jnp.take(items, idx, axis=0)
+    cloud_conf = cloud_fn(esc_items)                     # (capacity,)
+    # scatter cloud decisions back
+    cloud_dec = (cloud_conf > 0.5)
+    final = routes == ACCEPT                             # edge accepts
+    upd = jnp.where(valid, cloud_dec, False)
+    final = final.at[idx].set(jnp.where(valid, upd, final[idx]))
+    return {
+        "decision": final,                               # (B,) bool: query object?
+        "routes": routes,
+        "edge_conf": edge_conf,
+        "n_escalated": n_esc,
+        "escalated_frac": n_esc / B,
+    }
+
+
+@dataclasses.dataclass
+class CascadePair:
+    """An (edge CQ-specific model, cloud high-accuracy model) pair."""
+    edge_cfg: Any
+    cloud_cfg: Any
+    edge_apply: Callable      # (params, batch) -> (B, C) logits
+    cloud_apply: Callable
+    query_class: int = 1
+
+    def edge_confidence(self, edge_params, batch) -> jax.Array:
+        return confidence_from_logits(
+            self.edge_apply(edge_params, batch), self.query_class)
+
+    def cloud_confidence(self, cloud_params, batch) -> jax.Array:
+        return confidence_from_logits(
+            self.cloud_apply(cloud_params, batch), self.query_class)

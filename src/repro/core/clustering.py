@@ -1,0 +1,61 @@
+"""Camera profiling + K-means clustering (paper §IV-A), in JAX.
+
+A camera's *profile* is its proportion vector: occurrence frequencies of
+object classes across its leisure-time frames (labeled by the high-accuracy
+cloud models).  Cameras are clustered on profiles with K-means; each cluster
+shares one context-specific training dataset.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def proportion_vector(labels: jax.Array, num_classes: int) -> jax.Array:
+    """labels: (N,) int32 detected-object classes -> (C,) frequencies."""
+    counts = jnp.zeros((num_classes,), jnp.float32).at[labels].add(1.0)
+    return counts / jnp.maximum(jnp.sum(counts), 1.0)
+
+
+def kmeans(profiles: jax.Array, k: int, *, iters: int = 50,
+           key: jax.Array | None = None) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """K-means on (N, C) profiles.
+
+    Returns (assignments (N,), centers (k, C), inertia ()).  Deterministic
+    k-means++-style farthest-point init when ``key`` is None.
+    """
+    n, c = profiles.shape
+    x = profiles.astype(jnp.float32)
+
+    # farthest-point init (deterministic; k-means++ without randomness)
+    def init_step(carry, _):
+        centers, chosen = carry
+        d = jnp.min(
+            jnp.sum((x[:, None, :] - centers[None]) ** 2, -1)
+            + jnp.where(jnp.arange(centers.shape[0])[None] < chosen,
+                        0.0, jnp.inf), axis=1)
+        nxt = jnp.argmax(jnp.where(jnp.isfinite(d), d, -jnp.inf))
+        centers = centers.at[chosen].set(x[nxt])
+        return (centers, chosen + 1), None
+
+    centers0 = jnp.zeros((k, c), jnp.float32).at[0].set(x[0])
+    (centers, _), _ = jax.lax.scan(init_step, (centers0, 1), None, length=k - 1)
+
+    def em_step(centers, _):
+        d = jnp.sum((x[:, None, :] - centers[None]) ** 2, -1)     # (N,k)
+        assign = jnp.argmin(d, axis=1)
+        onehot = jax.nn.one_hot(assign, k, dtype=jnp.float32)     # (N,k)
+        tot = jnp.maximum(jnp.sum(onehot, axis=0), 1e-9)[:, None]
+        new_centers = (onehot.T @ x) / tot
+        # keep empty clusters where they were
+        new_centers = jnp.where(jnp.sum(onehot, axis=0)[:, None] > 0,
+                                new_centers, centers)
+        return new_centers, None
+
+    centers, _ = jax.lax.scan(em_step, centers, None, length=iters)
+    d = jnp.sum((x[:, None, :] - centers[None]) ** 2, -1)
+    assign = jnp.argmin(d, axis=1)
+    inertia = jnp.sum(jnp.min(d, axis=1))
+    return assign, centers, inertia

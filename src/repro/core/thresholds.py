@@ -1,0 +1,42 @@
+"""Dynamic confidence-threshold adaptation (paper Eqs. 8-9).
+
+The cascade uploads an image to the cloud when its edge confidence f falls in
+[beta, alpha].  SurveilEdge adapts the interval width to system load:
+
+  alpha_new = max(min(alpha_old - gamma1 * (l_d * t_d - s), 1), 0.5)     (8)
+  beta_new  = gamma2 * (1 - alpha_new)                                   (9)
+
+where l_d*t_d is the expected drain time of the chosen queue (queue length x
+per-item latency) and s is the query sampling interval.  When the system is
+overloaded (drain > s) the bracket shrinks -> fewer cloud uploads; when idle
+it widens -> more reclassification -> higher accuracy.  alpha is clamped to
+[0.5, 1] and beta < 0.5 by construction (gamma2 in (0,1)).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class ThresholdState:
+    alpha: float = 0.8
+    beta: float = 0.1
+    gamma1: float = 0.2
+    gamma2: float = 0.25
+
+    def update(self, queue_len: float, item_latency: float,
+               interval_s: float) -> "ThresholdState":
+        """Eq. 8/9 update given the selected queue's drain time."""
+        drain = queue_len * item_latency
+        alpha = self.alpha - self.gamma1 * (drain - interval_s)
+        alpha = max(min(alpha, 1.0), 0.5)
+        beta = self.gamma2 * (1.0 - alpha)
+        return dataclasses.replace(self, alpha=alpha, beta=beta)
+
+    def triage(self, confidence: float):
+        """-> 'accept' | 'reject' | 'escalate' for one confidence value."""
+        if confidence > self.alpha:
+            return "accept"
+        if confidence < self.beta:
+            return "reject"
+        return "escalate"

@@ -1,0 +1,63 @@
+"""The full moving-object detection stage (paper §IV-C), end to end.
+
+frames -> frame difference (Pallas) -> dilate/erode (Pallas) -> CCL ->
+filtered bounding boxes -> crops ready for the cascade classifier.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.detection import components
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class Detection:
+    box: components.Box
+    crop: np.ndarray          # (ch, cw, 3) uint8-valued
+
+
+def motion_mask(f0: jax.Array, f1: jax.Array, f2: jax.Array, *,
+                threshold: int = 40,
+                use_pallas: bool = True) -> jax.Array:
+    """Eqs. 1-6: framediff + dilate + erode.  (B,H,W,3)x3 -> (B,H,W)."""
+    m = ops.framediff(f0, f1, f2, threshold=threshold, use_pallas=use_pallas)
+    m = ops.dilate3x3(m, use_pallas=use_pallas)
+    m = ops.erode3x3(m, use_pallas=use_pallas)
+    return m
+
+
+def detect(frames: np.ndarray, *, threshold: int = 40, crop: int = 32,
+           min_area: int = 12, use_pallas: bool = True
+           ) -> List[List[Detection]]:
+    """frames: (3, H, W, 3) consecutive triple (or (B,3,H,W,3)).
+
+    Returns, per batch item, the filtered detections of the middle frame.
+    """
+    arr = np.asarray(frames)
+    if arr.ndim == 4:
+        arr = arr[None]
+    B = arr.shape[0]
+    f0, f1, f2 = (jnp.asarray(arr[:, i]) for i in range(3))
+    mask = motion_mask(f0, f1, f2, threshold=threshold, use_pallas=use_pallas)
+    labels = components.label_components(mask)
+    labels_np = np.asarray(labels)
+    out: List[List[Detection]] = []
+    for b in range(B):
+        boxes = components.extract_boxes(labels_np[b], min_area=min_area)
+        dets = []
+        for box in boxes:
+            cy = (box.y0 + box.y1) // 2
+            cx = (box.x0 + box.x1) // 2
+            half = crop // 2
+            y0 = np.clip(cy - half, 0, arr.shape[2] - crop)
+            x0 = np.clip(cx - half, 0, arr.shape[3] - crop)
+            dets.append(Detection(
+                box, arr[b, 1, y0:y0 + crop, x0:x0 + crop]))
+        out.append(dets)
+    return out

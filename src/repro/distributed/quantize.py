@@ -1,0 +1,93 @@
+"""int8 weight quantization for serving (beyond-paper; EXPERIMENTS.md §Perf).
+
+Symmetric int8 with per-output-channel scales.  Quantization is *meta-aware*
+(``repro.models.meta``): only weight leaves (init == normal/scaled, ndim>=2)
+are quantized; norm scales, biases and SSM time constants stay in fp.
+Layer-stacked leaves keep their leading ``stack`` dim in the scale tensor —
+shape (L, out_dim) — so the quantized tree remains a valid ``lax.scan`` xs.
+
+Dequantization happens *inside* the layer scan body (see
+``transformer.maybe_dequant``): only one layer's weights are ever resident
+in bf16, which is what lets a 42B MoE serve with 1-D tensor-parallel weights
+on 16 GB chips.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import meta as M
+from repro.models.config import ModelConfig
+
+
+def _is_quant(leaf: Any) -> bool:
+    return isinstance(leaf, dict) and set(leaf) == {"q", "s"}
+
+
+def quantize_leaf(x: jax.Array, stacked: bool):
+    """x: (..., out).  Scale over every dim except the last (and, for
+    stacked leaves, except the leading layer dim)."""
+    axes = tuple(range(1 if stacked else 0, x.ndim - 1))
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axes) \
+        if axes else jnp.abs(x.astype(jnp.float32))
+    scale = jnp.maximum(amax, 1e-8) / 127.0      # (out,) or (L, out)
+    bshape = ((x.shape[0],) if stacked else ()) + \
+        (1,) * len(axes) + (x.shape[-1],)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale.reshape(bshape)),
+                 -127, 127).astype(jnp.int8)
+    return {"q": q, "s": scale}
+
+
+def dequantize_leaf(leaf, dtype=jnp.bfloat16) -> jax.Array:
+    q, s = leaf["q"], leaf["s"]
+    if s.ndim == 2 and q.ndim >= 3 and s.shape[0] == q.shape[0]:
+        s = s.reshape((q.shape[0],) + (1,) * (q.ndim - 2) + (q.shape[-1],))
+    return (q.astype(jnp.float32) * s).astype(dtype)
+
+
+def _quantizable(pm: M.ParamMeta) -> bool:
+    return pm.init in ("normal", "scaled") and len(pm.shape) >= 2
+
+
+def quantize_tree(params: Any, cfg: ModelConfig) -> Any:
+    """Quantize weight leaves per the model's param metadata."""
+    metas = M.model_meta(cfg)
+
+    def f(pm, leaf):
+        if _quantizable(pm):
+            return quantize_leaf(leaf, stacked=pm.axes[0] == M.STACK)
+        return leaf
+
+    return jax.tree.map(f, metas, params,
+                        is_leaf=lambda x: isinstance(x, M.ParamMeta))
+
+
+def dequant_tree(params: Any, dtype=jnp.bfloat16) -> Any:
+    """Inverse of quantize_tree (structure-preserving; no-op on fp leaves)."""
+    return jax.tree.map(
+        lambda l: dequantize_leaf(l, dtype) if _is_quant(l) else l,
+        params, is_leaf=_is_quant)
+
+
+def abstract_quantized(params_abs: Any, cfg: ModelConfig) -> Any:
+    """ShapeDtypeStruct tree of the quantized layout (for the dry-run)."""
+    return jax.eval_shape(lambda p: quantize_tree(p, cfg), params_abs)
+
+
+def quantized_shardings(pshard: Any, params_abs: Any, cfg: ModelConfig,
+                        mesh) -> Any:
+    """Sharding tree matching ``abstract_quantized``: int8 values keep the
+    original leaf's sharding; the small scale tensors are replicated."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    metas = M.model_meta(cfg)
+    repl = NamedSharding(mesh, P())
+
+    def f(pm, sh):
+        if _quantizable(pm):
+            return {"q": sh, "s": repl}
+        return sh
+
+    return jax.tree.map(f, metas, pshard,
+                        is_leaf=lambda x: isinstance(x, M.ParamMeta))

@@ -1,0 +1,217 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Parameters carry *logical* axis names (see ``repro.models.meta``).  This
+module maps them onto the production mesh:
+
+  mesh axes: ("pod", "data", "model")  (multi-pod)  or  ("data", "model")
+
+Rules (MaxText-style):
+  * tensor-parallel axes (heads / kv_heads / mlp / experts / ssm_inner /
+    ssm_heads / vocab) -> "model"
+  * FSDP: the "embed" logical axis -> "data" in *train* mode (params, grads
+    and Adam moments all shard); replicated in serve mode.
+  * every mapping is guarded by divisibility (a 25-head attention cannot
+    shard over 16 chips -> replicate) and by one-mesh-axis-per-leaf.
+
+Activation constraints use the same mesh: batch on ("pod","data"), heads /
+mlp-hidden / vocab on "model", all divisibility-guarded.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import meta as M
+from repro.models.config import ModelConfig
+
+TP_AXES = ("vocab", "heads", "kv_heads", "mlp", "experts",
+           "ssm_inner", "ssm_heads")
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Batch-sharding axes: ('pod','data') on the multi-pod mesh."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def data_size(mesh: Mesh) -> int:
+    n = 1
+    for a in data_axes(mesh):
+        n *= _axis_size(mesh, a)
+    return n
+
+
+def logical_to_mesh(cfg: ModelConfig, mesh: Mesh, mode: str,
+                    force_1d_serve: bool = False) -> Dict[str, Any]:
+    """Logical axis name -> mesh axis (or tuple) candidate."""
+    rules: Dict[str, Any] = {a: "model" for a in TP_AXES}
+    if cfg.is_moe:
+        # experts take the model axis; per-expert mlp dim stays unsharded
+        rules["mlp"] = None
+    # FSDP ('embed' on the data axis): always in train; in serve only for
+    # models whose 1-D TP shard would not fit per-chip HBM (2-D weight
+    # sharding, vLLM-on-TPU style — costs per-layer weight all-gathers).
+    # force_1d_serve keeps decode weights resident (EXPERIMENTS.md §Perf:
+    # for one-token steps the 2-D gathers cost ~100 ms of ICI per step,
+    # dwarfing the HBM win — prefer 1-D whenever the shard fits).
+    two_d_serve = (cfg.param_count() * 2 / _axis_size(mesh, "model") > 2e9
+                   and not force_1d_serve)
+    rules["embed"] = "data" if (mode == "train" or two_d_serve) else None
+    return rules
+
+
+def spec_for_meta(cfg: ModelConfig, pm: M.ParamMeta, mesh: Mesh,
+                  mode: str, force_1d_serve: bool = False) -> P:
+    rules = logical_to_mesh(cfg, mesh, mode, force_1d_serve)
+    used = set()
+    out = []
+    for dim, ax in zip(pm.shape, pm.axes):
+        cand = rules.get(ax) if ax else None
+        if cand is None or cand in used:
+            out.append(None)
+            continue
+        if dim % _axis_size(mesh, cand) != 0:
+            out.append(None)
+            continue
+        used.add(cand)
+        out.append(cand)
+    return P(*out)
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, mode: str,
+                force_1d_serve: bool = False) -> Any:
+    """PartitionSpec tree mirroring the param tree."""
+    return jax.tree.map(
+        lambda pm: spec_for_meta(cfg, pm, mesh, mode, force_1d_serve),
+        M.model_meta(cfg), is_leaf=lambda x: isinstance(x, M.ParamMeta))
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, mode: str,
+                    force_1d_serve: bool = False) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(cfg, mesh, mode, force_1d_serve))
+
+
+def _batch_spec(mesh: Mesh, batch: int) -> Any:
+    """Largest prefix of ('pod','data') that divides the batch."""
+    axes = []
+    n = 1
+    for a in data_axes(mesh):
+        if batch % (n * _axis_size(mesh, a)) == 0:
+            axes.append(a)
+            n *= _axis_size(mesh, a)
+    if not axes:
+        return None
+    return tuple(axes) if len(axes) > 1 else axes[0]
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, batch: int,
+                tree: Any) -> Any:
+    """Shardings for an input-batch tree: dim0 = batch, rest replicated."""
+    b = _batch_spec(mesh, batch)
+
+    def spec(leaf):
+        nd = len(leaf.shape)
+        return NamedSharding(mesh, P(*((b,) + (None,) * (nd - 1))) if nd else P())
+
+    return jax.tree.map(spec, tree)
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, batch: int, cache: Any) -> Any:
+    """Shardings for a decode cache (semantic, by leaf name).
+
+    k/v/cross_k/cross_v: (L,B,S,KV,hd) — kv-heads on 'model' when divisible,
+    else context-parallel (seq dim on 'model'; needed to fit 32k x 128 GQA
+    caches where kv < tp).  ssd state (L,B,nh,hd,N): ssm heads on 'model'.
+    conv caches (L,B,W-1,C): channels on 'model'.  Batch always on data axes.
+    """
+    b = _batch_spec(mesh, batch)
+    tp = _axis_size(mesh, "model")
+
+    def div(n: int) -> bool:
+        return n % tp == 0 and n > 1
+
+    def spec(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        shp = leaf.shape
+        if name in ("pos", "kpos"):     # per-sequence bookkeeping: (B,)/(B,W)
+            return NamedSharding(mesh, P(b, *((None,) * (len(shp) - 1))))
+        if len(shp) <= 1:
+            return NamedSharding(mesh, P(*((None,) * len(shp))))
+        out = [None] * len(shp)
+        out[1] = b                      # batch dim (after layer-stack dim)
+        if name in ("k", "v", "cross_k", "cross_v", "k_scale", "v_scale"):
+            # (L,B,S,KV,hd) values / (L,B,S,KV) scales: same layout rule
+            if div(shp[3]):             # kv heads
+                out[3] = "model"
+            elif div(shp[2]):           # context-parallel fallback
+                out[2] = "model"
+        elif name == "ssd":
+            if div(shp[2]):             # ssm heads
+                out[2] = "model"
+            elif div(shp[3]):
+                out[3] = "model"
+        elif len(shp) >= 4 and div(shp[3]):   # conv caches: channels
+            out[3] = "model"
+        return NamedSharding(mesh, P(*out))
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+# --- activation constraints -------------------------------------------------
+
+class ActCtx:
+    """Callable passed as ``ctx`` through the model: ctx(x, name) constrains x."""
+
+    def __init__(self, cfg: ModelConfig, mesh: Mesh, *,
+                 seq_shard_resid: bool = True,
+                 shard_moe_flat: bool = True):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.tp = _axis_size(mesh, "model")
+        self.seq_shard_resid = seq_shard_resid
+        self.shard_moe_flat = shard_moe_flat
+
+    def _maybe(self, dim: int, axis) -> Optional[str]:
+        if axis is None:
+            return None
+        n = 1
+        for a in (axis if isinstance(axis, tuple) else (axis,)):
+            n *= _axis_size(self.mesh, a)
+        return axis if dim % n == 0 and n > 1 else None
+
+    def __call__(self, x: jax.Array, name: str) -> jax.Array:
+        b = self._maybe(x.shape[0], _batch_spec(self.mesh, x.shape[0]))
+        if name == "resid" and x.ndim == 3 and x.shape[1] > 1 \
+                and self.seq_shard_resid:
+            # sequence parallelism: residuals sharded on 'model' along seq so
+            # the saved scan carries fit HBM in train mode
+            spec = P(b, self._maybe(x.shape[1], "model"), None)
+        elif name == "resid":                     # (B,S,D)
+            spec = P(b, *([None] * (x.ndim - 1)))
+        elif name == "act_q" and x.ndim == 4:     # (B,S,H,hd)
+            spec = P(b, None, self._maybe(x.shape[2], "model"), None)
+        elif name == "moe_buf" and x.ndim == 4:   # (B,E,cap,D)
+            spec = P(b, self._maybe(x.shape[1], "model"), None, None)
+        elif name == "moe_flat" and x.ndim == 3:  # (B,S*K,D) dispatch entries
+            tk = self._maybe(x.shape[1], "model") if self.shard_moe_flat else None
+            spec = P(b, tk, None)
+        elif name == "logits":                    # (B,S,V) or (B,V)
+            v = self._maybe(x.shape[-1], "model")
+            if x.ndim == 3 and v is None:
+                # vocab not divisible by tp (odd vocabs: granite, whisper,
+                # internvl2, mamba2) -> shard the seq dim instead; the xent
+                # reduction stays local per position.
+                spec = P(b, self._maybe(x.shape[1], "model"), None)
+            else:
+                spec = P(b, *([None] * (x.ndim - 2)), v)
+        else:
+            spec = P(b, *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))

@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: fused flash attention (online softmax, GQA, causal).
+
+The roofline (§Roofline) shows every train/prefill pair compute-bound with
+the unfused attention path paying extra HBM round-trips for scores/probs.
+This kernel keeps a (block_q, hd) f32 accumulator in VMEM/VREGs and streams
+K/V blocks with the online-softmax recurrence — one HBM pass over Q/K/V.
+
+Grid: (batch, q_heads, Sq/block_q).  GQA maps q-head h to kv-head
+h // (H // KV) in the BlockSpec index map.  Causal masking skips fully
+masked K blocks via the loop upper bound.
+
+Target: TPU MXU (block shapes multiples of (8,128) after padding by ops.py);
+validated on CPU in interpret mode against ``ref.mha_ref``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *,
+                  block_q: int, block_k: int, causal: bool, scale: float):
+    # q_ref: (1,1,block_q,hd); k_ref/v_ref: (1,1,Sk,hd); o_ref like q_ref
+    qi = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, hd)
+    Sk = k_ref.shape[2]
+    hd = q.shape[-1]
+    nk = Sk // block_k
+
+    if causal:
+        # last k block that intersects the triangle for this q block
+        hi = jax.lax.div((qi + 1) * block_q + block_k - 1, block_k)
+        hi = jnp.minimum(hi, nk)
+    else:
+        hi = nk
+
+    def body(j, carry):
+        acc, m, l = carry
+        k = jax.lax.dynamic_slice(
+            k_ref[0, 0], (j * block_k, 0), (block_k, hd)).astype(jnp.float32)
+        v = jax.lax.dynamic_slice(
+            v_ref[0, 0], (j * block_k, 0), (block_k, hd)).astype(jnp.float32)
+        s = q @ k.T                                       # (bq, bk)
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            kpos = j * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((block_q, hd), jnp.float32)
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, hi, body, (acc0, m0, l0))
+    out = acc / jnp.maximum(l, 1e-20)[:, None]
+    o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = True) -> jax.Array:
+    """q: (B,H,Sq,hd); k/v: (B,KV,Sk,hd) with H % KV == 0.  -> (B,H,Sq,hd).
+
+    Sq % block_q == 0 and Sk % block_k == 0 (ops.py pads).
+    """
+    B, H, Sq, hd = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    assert H % KV == 0 and Sq % block_q == 0 and Sk % block_k == 0
+    G = H // KV
+    grid = (B, H, Sq // block_q)
+    kernel = functools.partial(_flash_kernel, block_q=block_q,
+                               block_k=block_k, causal=causal,
+                               scale=1.0 / math.sqrt(hd))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, Sk, hd), lambda b, h, i, g=G: (b, h // g, 0, 0)),
+            pl.BlockSpec((1, 1, Sk, hd), lambda b, h, i, g=G: (b, h // g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd), lambda b, h, i: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,109 @@
+"""Jit'd public wrappers for the Pallas kernels (padding, dtype, dispatch).
+
+``interpret`` defaults to True because this container is CPU-only; on a real
+TPU runtime set REPRO_PALLAS_INTERPRET=0 to compile the kernels.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import framediff as _fd
+from repro.kernels import morphology as _mo
+from repro.kernels import triage as _tr
+from repro.kernels import ref as _ref
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def _pad_hw(x: jax.Array, mh: int, mw: int, value=0) -> Tuple[jax.Array, int, int]:
+    H, W = x.shape[1], x.shape[2]
+    ph = (-H) % mh
+    pw = (-W) % mw
+    if ph or pw:
+        pad = [(0, 0), (0, ph), (0, pw)] + [(0, 0)] * (x.ndim - 3)
+        x = jnp.pad(x, pad, constant_values=value)
+    return x, H, W
+
+
+@functools.partial(jax.jit, static_argnames=("threshold", "maxval", "use_pallas"))
+def framediff(f0: jax.Array, f1: jax.Array, f2: jax.Array, *,
+              threshold: int = 40, maxval: int = 255,
+              use_pallas: bool = True) -> jax.Array:
+    """Binary motion mask from 3 consecutive frames (B,H,W,3) uint8/int."""
+    f0, f1, f2 = (x.astype(jnp.int32) for x in (f0, f1, f2))
+    if not use_pallas:
+        return _ref.framediff_ref(f0, f1, f2, threshold, maxval)
+    f0p, H, W = _pad_hw(f0, _fd.BLOCK_H, _fd.BLOCK_W)
+    f1p, _, _ = _pad_hw(f1, _fd.BLOCK_H, _fd.BLOCK_W)
+    f2p, _, _ = _pad_hw(f2, _fd.BLOCK_H, _fd.BLOCK_W)
+    out = _fd.framediff_pallas(f0p, f1p, f2p, threshold=threshold,
+                               maxval=maxval, interpret=INTERPRET)
+    return out[:, :H, :W]
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def dilate3x3(x: jax.Array, use_pallas: bool = True) -> jax.Array:
+    x = x.astype(jnp.int32)
+    if not use_pallas:
+        return _ref.dilate3x3_ref(x)
+    xp, H, W = _pad_hw(x, _mo.BAND_H, 1)
+    return _mo.dilate3x3_pallas(xp, interpret=INTERPRET)[:, :H, :W]
+
+
+@functools.partial(jax.jit, static_argnames=("maxval", "use_pallas"))
+def erode3x3(x: jax.Array, maxval: int = 255, use_pallas: bool = True) -> jax.Array:
+    x = x.astype(jnp.int32)
+    if not use_pallas:
+        return _ref.erode3x3_ref(x, maxval)
+    xp, H, W = _pad_hw(x, _mo.BAND_H, 1, value=maxval)
+    return _mo.erode3x3_pallas(xp, maxval=maxval, interpret=INTERPRET)[:, :H, :W]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "block_q", "block_k",
+                                    "use_pallas"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, use_pallas: bool = True) -> jax.Array:
+    """Fused attention.  q (B,H,Sq,hd), k/v (B,KV,Sk,hd) -> (B,H,Sq,hd).
+
+    Pads Sq/Sk up to block multiples; padded K positions are masked by the
+    causal rule (padded keys sit after all queries) or, for non-causal
+    inputs, by padding K with -inf-free zeros and masking via length.
+    """
+    if not use_pallas:
+        return _ref.mha_ref(q, k, v, causal)
+    B, H, Sq, hd = q.shape
+    Sk = k.shape[2]
+    pq = (-Sq) % block_q
+    pk = (-Sk) % block_k
+    if pk and (not causal or Sq > Sk):
+        # padded keys would be visible to real queries; fall back
+        return _ref.mha_ref(q, k, v, causal)
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0))) if pq else q
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0))) if pk else k
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0))) if pk else v
+    out = _fa.flash_attention_pallas(qp, kp, vp, causal=causal,
+                                     block_q=min(block_q, qp.shape[2]),
+                                     block_k=min(block_k, kp.shape[2]),
+                                     interpret=INTERPRET)
+    return out[:, :, :Sq]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("alpha", "beta", "capacity", "use_pallas"))
+def triage(conf: jax.Array, *, alpha: float, beta: float, capacity: int,
+           use_pallas: bool = True):
+    """(N,) confidences -> (routes, slots, count)."""
+    conf = conf.astype(jnp.float32)
+    if not use_pallas:
+        return _ref.triage_ref(conf, alpha, beta, capacity)
+    routes, slots, count = _tr.triage_pallas(
+        conf, alpha=alpha, beta=beta, capacity=capacity, interpret=INTERPRET)
+    return routes, slots, count[0]

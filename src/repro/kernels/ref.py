@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose reference)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def framediff_ref(f0: jax.Array, f1: jax.Array, f2: jax.Array,
+                  threshold: int, maxval: int = 255) -> jax.Array:
+    """Paper Eqs. 1-4 on uint8-valued int32 frames (B,H,W,3) -> (B,H,W) mask.
+
+    D1 = |f1-f0|, D2 = |f2-f1|, Da = D1 & D2 (bitwise), grayscale (BT.601
+    integer weights), fixed-level threshold -> {0, maxval}.
+    """
+    d1 = jnp.abs(f1 - f0)
+    d2 = jnp.abs(f2 - f1)
+    da = jnp.bitwise_and(d1, d2)
+    gray = (da[..., 0] * 299 + da[..., 1] * 587 + da[..., 2] * 114) // 1000
+    return jnp.where(gray > threshold, maxval, 0).astype(f0.dtype)
+
+
+def _shift2d(x: jax.Array, dy: int, dx: int, fill) -> jax.Array:
+    """Shift (..., H, W) by (dy, dx), filling vacated cells."""
+    H, W = x.shape[-2], x.shape[-1]
+    y = jnp.roll(x, (dy, dx), axis=(-2, -1))
+    if dy > 0:
+        y = y.at[..., :dy, :].set(fill)
+    elif dy < 0:
+        y = y.at[..., dy:, :].set(fill)
+    if dx > 0:
+        y = y.at[..., :, :dx].set(fill)
+    elif dx < 0:
+        y = y.at[..., :, dx:].set(fill)
+    return y
+
+
+def dilate3x3_ref(x: jax.Array) -> jax.Array:
+    """Paper Eq. 5: 3x3 max filter over (B,H,W) int32 (zero-padded)."""
+    out = x
+    for dy in (-1, 0, 1):
+        for dx in (-1, 0, 1):
+            out = jnp.maximum(out, _shift2d(x, dy, dx, 0))
+    return out
+
+
+def erode3x3_ref(x: jax.Array, maxval: int = 255) -> jax.Array:
+    """Paper Eq. 6: 3x3 min filter over (B,H,W) int32 (maxval-padded)."""
+    out = x
+    for dy in (-1, 0, 1):
+        for dx in (-1, 0, 1):
+            out = jnp.minimum(out, _shift2d(x, dy, dx, maxval))
+    return out
+
+
+def mha_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+            causal: bool = True) -> jax.Array:
+    """Unfused GQA attention oracle.  q (B,H,Sq,hd), k/v (B,KV,Sk,hd)."""
+    B, H, Sq, hd = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    qr = q.reshape(B, KV, G, Sq, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgqh,bksh->bkgqs", qr, k.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.float32(hd))
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksh->bkgqh", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, hd).astype(q.dtype)
+
+
+def triage_ref(conf: jax.Array, alpha: float, beta: float,
+               capacity: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Cascade triage + stable compaction of escalated indices.
+
+    conf (N,) f32 -> routes (N,) int32 {0 accept,1 reject,2 escalate},
+    slots (N,) int32 (slot in the escalation buffer, or -1),
+    count () int32.
+    """
+    routes = jnp.where(conf > alpha, 0,
+                       jnp.where(conf < beta, 1, 2)).astype(jnp.int32)
+    esc = routes == 2
+    pos = jnp.cumsum(esc.astype(jnp.int32)) - 1
+    slots = jnp.where(esc & (pos < capacity), pos, -1).astype(jnp.int32)
+    return routes, slots, jnp.sum(esc.astype(jnp.int32))

@@ -1,0 +1,47 @@
+"""Pallas TPU kernel: cascade triage + escalation compaction (core C1).
+
+One pass over a batch of edge confidences produces route codes, escalation
+buffer slots (stable prefix-sum compaction) and the escalated count.  This
+is the per-batch hot path of the SurveilEdge allocator: on TPU it runs as a
+single VMEM-resident block (batch sizes are << VMEM), avoiding three
+separate elementwise+scan launches.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _triage_kernel(conf_ref, routes_ref, slots_ref, count_ref, *,
+                   alpha: float, beta: float, capacity: int):
+    conf = conf_ref[...]
+    routes = jnp.where(conf > alpha, 0,
+                       jnp.where(conf < beta, 1, 2)).astype(jnp.int32)
+    esc = routes == 2
+    pos = jnp.cumsum(esc.astype(jnp.int32)) - 1
+    slots = jnp.where(esc & (pos < capacity), pos, -1).astype(jnp.int32)
+    routes_ref[...] = routes
+    slots_ref[...] = slots
+    count_ref[0] = jnp.sum(esc.astype(jnp.int32))
+
+
+def triage_pallas(conf: jax.Array, *, alpha: float, beta: float,
+                  capacity: int, interpret: bool = True):
+    """conf (N,) f32 -> (routes (N,) i32, slots (N,) i32, count (1,) i32)."""
+    (N,) = conf.shape
+    kernel = functools.partial(_triage_kernel, alpha=alpha, beta=beta,
+                               capacity=capacity)
+    return pl.pallas_call(
+        kernel,
+        in_specs=[pl.BlockSpec((N,), lambda: (0,))],
+        out_specs=(pl.BlockSpec((N,), lambda: (0,)),
+                   pl.BlockSpec((N,), lambda: (0,)),
+                   pl.BlockSpec((1,), lambda: (0,))),
+        out_shape=(jax.ShapeDtypeStruct((N,), jnp.int32),
+                   jax.ShapeDtypeStruct((N,), jnp.int32),
+                   jax.ShapeDtypeStruct((1,), jnp.int32)),
+        interpret=interpret,
+    )(conf)

@@ -1,0 +1,307 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST run before any jax import: jax locks the device count at first init.
+
+DOC = """Multi-pod dry-run: lower + compile every (arch x input-shape x mesh) combo.
+
+For each combination this builds the exact jitted step the launcher would run
+(train_step / prefill_step / decode_step), with explicit in/out shardings on
+the production mesh, compiles it with ShapeDtypeStructs only (no allocation),
+and records:
+
+  * memory_analysis()      -> bytes per device (proves it fits)
+  * cost_analysis()        -> per-device FLOPs / bytes for the roofline
+  * collective inventory   -> parsed from the optimized HLO
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ASSIGNED, get_config
+from repro.configs.shapes import (INPUT_SHAPES, InputShape, attn_cache_len,
+                                  decode_window, input_specs)
+from repro.distributed import sharding as SH
+from repro.launch import mesh as MESH
+from repro.models import meta as M
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+from repro.train import steps as ST
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+               "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def parse_collectives(hlo: str) -> Dict[str, Any]:
+    """Sum result-shape bytes of every collective op in optimized HLO.
+
+    Returns {kind: {count, bytes}} plus 'total_bytes' (sum over kinds,
+    all-reduce counted twice: reduce + broadcast phases of a ring).
+    """
+    out: Dict[str, Any] = {k: {"count": 0, "bytes": 0} for k in COLLECTIVES}
+    shape_re = re.compile(r"(\w+)\[([0-9,]*)\]")
+    for line in hlo.splitlines():
+        s = line.strip()
+        if s.startswith("%") or s.startswith("ROOT"):
+            m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)", s)
+            if not m:
+                continue
+            rest = m.group(1)
+            kind = next((k for k in COLLECTIVES
+                         if re.search(rf"\b{k}(-start|-done)?\(", rest)), None)
+            if kind is None or f"{kind}-done(" in rest:
+                continue
+            # result type(s): everything before the op name
+            head = rest.split(f" {kind}", 1)[0] if f" {kind}" in rest else rest
+            nbytes = 0
+            for dt, dims in shape_re.findall(head):
+                if dt not in DTYPE_BYTES:
+                    continue
+                n = 1
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+                nbytes += n * DTYPE_BYTES[dt]
+            mult = 2 if kind == "all-reduce" else 1
+            out[kind]["count"] += 1
+            out[kind]["bytes"] += nbytes * mult
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def _mem_analysis(compiled) -> Dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+        arg = float(getattr(ma, "argument_size_in_bytes", 0))
+        out = float(getattr(ma, "output_size_in_bytes", 0))
+        tmp = float(getattr(ma, "temp_size_in_bytes", 0))
+        alias = float(getattr(ma, "alias_size_in_bytes", 0))
+        return {
+            "argument_bytes": arg, "output_bytes": out, "temp_bytes": tmp,
+            "alias_bytes": alias,
+            # donated outputs alias their inputs: don't double-count
+            "peak_bytes": arg + tmp + out - alias,
+        }
+    except Exception as e:                         # pragma: no cover
+        return {"error": str(e)}
+
+
+def _cost_analysis(compiled) -> Dict[str, float]:
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and (
+                    "flops" in k or "bytes" in k or k in ("transcendentals",))}
+    except Exception as e:                         # pragma: no cover
+        return {"error": str(e)}
+
+
+def build_program(cfg: ModelConfig, shape: InputShape, mesh,
+                  dtype=jnp.bfloat16, overrides=None):
+    """Returns (fn, args_abstract, in_shardings, out_shardings).
+
+    ``overrides`` (perf-iteration knobs, see EXPERIMENTS.md §Perf):
+      micro: int            gradient-accumulation factor (train)
+      kv_dtype: str         'int8' quantized KV cache (decode)
+      remat_policy: str     'dots' | 'dots_no_batch' checkpoint policy
+      no_seq_shard: bool    disable sequence-parallel residual sharding
+    """
+    import dataclasses as _dc
+    ov = overrides or {}
+    if ov.get("kv_dtype"):
+        cfg = _dc.replace(cfg, kv_cache_dtype=ov["kv_dtype"])
+    mode = "train" if shape.kind == "train" else "serve"
+    ctx = SH.ActCtx(cfg, mesh,
+                    seq_shard_resid=not ov.get("no_seq_shard", False),
+                    shard_moe_flat=not ov.get("no_moe_flat_shard", False))
+    pspecs = SH.param_shardings(cfg, mesh, mode,
+                                force_1d_serve=ov.get("serve_1d", False))
+    params_abs = M.abstract_params(cfg, dtype)
+    if ov.get("quant_weights") and mode == "serve":
+        from repro.distributed import quantize as QZ
+        pspecs = QZ.quantized_shardings(pspecs, params_abs, cfg, mesh)
+        params_abs = QZ.abstract_quantized(params_abs, cfg)
+    batch_abs = input_specs(cfg, shape, dtype)
+    batch_sh = SH.batch_specs(cfg, mesh, shape.global_batch, batch_abs)
+    repl = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        opt_cfg = adamw.AdamWConfig()
+        micro = ov.get("micro") or ST.default_microbatches(
+            cfg, shape.global_batch, SH.data_size(mesh))
+        fn = ST.make_train_step(cfg, opt_cfg, remat=True,
+                                microbatches=micro,
+                                remat_policy=ov.get("remat_policy"), ctx=ctx)
+        opt_abs = adamw.abstract_state(params_abs)
+        opt_sh = adamw.AdamWState(
+            count=repl,
+            m=jax.tree.map(lambda _, s: s, params_abs, pspecs),
+            v=jax.tree.map(lambda _, s: s, params_abs, pspecs))
+        state_abs = ST.TrainState(params_abs, opt_abs,
+                                  jax.ShapeDtypeStruct((), jnp.int32))
+        state_sh = ST.TrainState(pspecs, opt_sh, repl)
+        metrics_sh = {k: repl for k in
+                      ("lm_loss", "moe_aux", "grad_norm", "lr", "loss")}
+        return (fn, (state_abs, batch_abs), (state_sh, batch_sh),
+                (state_sh, metrics_sh))
+
+    if shape.kind == "prefill":
+        window = decode_window(cfg, shape)
+        cache_len = attn_cache_len(cfg, shape)
+        fn = ST.make_prefill_step(cfg, cache_len=cache_len, window=window,
+                                  ctx=ctx)
+        cache_abs = T.make_cache(cfg, shape.global_batch, cache_len,
+                                 dtype=dtype, abstract=True)
+        cache_sh = SH.cache_specs(cfg, mesh, shape.global_batch, cache_abs)
+        logits_sh = NamedSharding(
+            mesh, P(SH._batch_spec(mesh, shape.global_batch), None))
+        return (fn, (params_abs, batch_abs), (pspecs, batch_sh),
+                (logits_sh, cache_sh))
+
+    # decode
+    window = decode_window(cfg, shape)
+    cache_len = attn_cache_len(cfg, shape)
+    fn = ST.make_decode_step(cfg, window=window, ctx=ctx)
+    cache_abs = T.make_cache(cfg, shape.global_batch, cache_len,
+                             dtype=dtype, abstract=True)
+    cache_sh = SH.cache_specs(cfg, mesh, shape.global_batch, cache_abs)
+    token_abs = batch_abs["token"]
+    token_sh = SH.batch_specs(cfg, mesh, shape.global_batch,
+                              {"token": token_abs})["token"]
+    logits_sh = NamedSharding(
+        mesh, P(SH._batch_spec(mesh, shape.global_batch), None))
+    return (fn, (params_abs, cache_abs, token_abs),
+            (pspecs, cache_sh, token_sh), (logits_sh, cache_sh))
+
+
+def dryrun_one(arch: str, shape_name: str, mesh_kind: str,
+               verbose: bool = True, overrides=None) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = MESH.make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    fn, args, in_sh, out_sh = build_program(cfg, shape, mesh,
+                                            overrides=overrides)
+    # buffer donation: decode steps donate the KV cache (arg 1), train steps
+    # donate the TrainState (arg 0) — standard serving/training practice and
+    # required for the 32k x 128 caches to fit per-chip HBM.
+    donate = (1,) if shape.kind == "decode" else (
+        (0,) if shape.kind == "train" else ())
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=donate).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    mem = _mem_analysis(compiled)
+    cost = _cost_analysis(compiled)
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = lowered.as_text()
+    coll = parse_collectives(hlo)
+    n_chips = MESH.chips(mesh)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "chips": n_chips,
+        "params": cfg.param_count(),
+        "active_params": cfg.param_count(active_only=True),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": mem, "cost": cost, "collectives": coll,
+        "window": decode_window(cfg, shape),
+    }
+    if verbose:
+        flops = cost.get("flops", 0.0)
+        peak = mem.get("peak_bytes", 0.0)
+        print(f"[dryrun] {arch:26s} {shape_name:12s} {mesh_kind:6s} "
+              f"chips={n_chips:3d} perdev_flops={flops:.3e} "
+              f"peak_dev_bytes={peak/2**30:.2f}GiB "
+              f"coll={coll['total_bytes']/2**20:.1f}MiB "
+              f"(lower {t_lower:.1f}s compile {t_compile:.1f}s)")
+        print("  memory_analysis:", {k: round(v / 2**20, 1) if isinstance(v, float) else v
+                                     for k, v in mem.items()}, "(MiB)")
+        print("  cost_analysis:", {k: f"{v:.3e}" for k, v in cost.items()
+                                   if isinstance(v, float)})
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=DOC)
+    ap.add_argument("--arch", default=None, help="architecture id (or --all)")
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) combination")
+    ap.add_argument("--out", default=None, help="directory for JSON records")
+    ap.add_argument("--micro", type=int, default=None,
+                    help="override gradient-accumulation factor")
+    ap.add_argument("--kv-dtype", default=None, choices=["int8"],
+                    help="quantized KV cache")
+    ap.add_argument("--remat-policy", default=None,
+                    choices=["dots", "dots_no_batch"])
+    ap.add_argument("--no-seq-shard", action="store_true",
+                    help="disable sequence-parallel residuals")
+    ap.add_argument("--no-moe-flat-shard", action="store_true",
+                    help="keep MoE dispatch tensors batch-sharded only")
+    ap.add_argument("--serve-1d", action="store_true",
+                    help="force 1-D TP weights in serve mode (no FSDP gathers)")
+    ap.add_argument("--quant-weights", action="store_true",
+                    help="serve with int8 weights (per-channel scales)")
+    args = ap.parse_args(argv)
+    overrides = {"micro": args.micro, "kv_dtype": args.kv_dtype,
+                 "remat_policy": args.remat_policy,
+                 "no_seq_shard": args.no_seq_shard,
+                 "no_moe_flat_shard": args.no_moe_flat_shard,
+                 "serve_1d": args.serve_1d,
+                 "quant_weights": args.quant_weights}
+
+    archs = ASSIGNED if (args.all or args.arch is None) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mk in meshes:
+                try:
+                    rec = dryrun_one(arch, shape, mk, overrides=overrides)
+                    if args.out:
+                        os.makedirs(args.out, exist_ok=True)
+                        fname = f"{arch.replace('/', '_')}__{shape}__{mk}.json"
+                        with open(os.path.join(args.out, fname), "w") as f:
+                            json.dump(rec, f, indent=1)
+                except Exception as e:
+                    failures.append((arch, shape, mk, repr(e)))
+                    print(f"[dryrun] FAIL {arch} {shape} {mk}: {e!r}",
+                          file=sys.stderr)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:", file=sys.stderr)
+        for f in failures:
+            print("  ", *f, file=sys.stderr)
+        return 1
+    print("\nAll dry-runs compiled successfully.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,39 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module does not touch jax device state.  The dry-run launcher
+sets XLA_FLAGS=--xla_force_host_platform_device_count=512 *before* any jax
+import; everything else sees the real single CPU device.
+
+Target hardware: TPU v5e, 256 chips/pod, 2 pods.
+  single-pod mesh: (16, 16)      axes ("data", "model")
+  multi-pod mesh:  (2, 16, 16)   axes ("pod", "data", "model")
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+# v5e hardware constants (per chip) — used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW = 50e9                   # bytes/s per link (~unidirectional)
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh() -> Mesh:
+    """Single-device mesh for CPU smoke tests (data=1, model=1)."""
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         devices=jax.devices()[:1])
+
+
+def chips(mesh: Mesh) -> int:
+    n = 1
+    for v in mesh.shape.values():
+        n *= v
+    return n

@@ -1,0 +1,57 @@
+"""Multi-host bring-up for real TPU pod slices.
+
+On a v5e pod slice every host runs the same binary; this module initializes
+jax.distributed from the standard TPU environment (or explicit flags),
+builds the production mesh over the global device set, and exposes the
+host-sharded data-feeding helpers.  The CPU container exercises the same
+code paths via the dry-run (which fakes 512 devices); nothing here is
+imported by the dry-run so device counts never conflict.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+from typing import Optional
+
+import jax
+
+from repro.launch.mesh import make_production_mesh
+
+
+def initialize(coordinator: Optional[str] = None,
+               num_processes: Optional[int] = None,
+               process_id: Optional[int] = None) -> None:
+    """jax.distributed.initialize with TPU-env autodetection fallback."""
+    kwargs = {}
+    if coordinator:
+        kwargs = dict(coordinator_address=coordinator,
+                      num_processes=num_processes, process_id=process_id)
+    jax.distributed.initialize(**kwargs)
+
+
+def describe() -> str:
+    return (f"process {jax.process_index()}/{jax.process_count()} — "
+            f"{jax.local_device_count()} local / "
+            f"{jax.device_count()} global devices")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--coordinator", default=os.environ.get("COORDINATOR_ADDRESS"))
+    ap.add_argument("--num-processes", type=int,
+                    default=int(os.environ.get("NUM_PROCESSES", "0")) or None)
+    ap.add_argument("--process-id", type=int,
+                    default=int(os.environ.get("PROCESS_ID", "-1")))
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args(argv)
+
+    initialize(args.coordinator, args.num_processes,
+               args.process_id if args.process_id >= 0 else None)
+    print(describe())
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    print(f"mesh: {dict(mesh.shape)}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

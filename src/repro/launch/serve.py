@@ -1,0 +1,84 @@
+"""Serving launcher: batched prefill+decode with the cascade front-end.
+
+Serves a (reduced, CPU-runnable) model behind the SurveilEdge triage: each
+request batch is scored by the edge CQ model; confident requests are answered
+at the edge, uncertain ones run the full ("cloud") model decode.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \\
+      --requests 32 --decode-steps 8
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import cascade as C
+from repro.core.thresholds import ThresholdState
+from repro.models import meta as M
+from repro.models import transformer as T
+from repro.train import steps as ST
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--decode-steps", type=int, default=8)
+    ap.add_argument("--alpha", type=float, default=0.8)
+    ap.add_argument("--beta", type=float, default=0.1)
+    args = ap.parse_args(argv)
+
+    cloud_cfg = get_config(args.arch).reduced()
+    edge_cfg = get_config(args.arch).edge_variant()
+    key = jax.random.PRNGKey(0)
+    cloud_params = M.init_params(cloud_cfg, key)
+    edge_params = M.init_params(edge_cfg, jax.random.PRNGKey(1))
+    print(f"[serve] cloud={cloud_cfg.name} ({cloud_cfg.param_count()/1e6:.1f}M) "
+          f"edge={edge_cfg.name} ({edge_cfg.param_count()/1e6:.1f}M)")
+
+    B, S = args.requests, args.prompt_len
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (B, S),
+                                0, min(edge_cfg.vocab_size,
+                                       cloud_cfg.vocab_size))
+
+    # --- edge triage ---------------------------------------------------------
+    classify = jax.jit(ST.make_classify_fn(edge_cfg))
+    conf = C.confidence_from_logits(classify(edge_params, {"tokens": tokens}))
+    th = ThresholdState(alpha=args.alpha, beta=args.beta)
+    routes = C.triage(conf, jnp.float32(th.alpha), jnp.float32(th.beta))
+    idx, valid, n_esc = C.compact_escalated(routes, capacity=B)
+    print(f"[serve] triage: accept={int((routes == 0).sum())} "
+          f"reject={int((routes == 1).sum())} escalate={int(n_esc)}")
+
+    # --- cloud decode for escalated requests ----------------------------------
+    esc_tokens = jnp.take(tokens, idx, axis=0)
+    prefill = jax.jit(lambda p, t: T.prefill(
+        cloud_cfg, p, t, cache_len=S + args.decode_steps))
+    decode = jax.jit(lambda p, c, t: T.decode_step(cloud_cfg, p, c, t))
+
+    t0 = time.perf_counter()
+    logits, cache = prefill(cloud_params, esc_tokens)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    generated = [tok]
+    for _ in range(args.decode_steps - 1):
+        logits, cache = decode(cloud_params, cache, tok)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        generated.append(tok)
+    jax.block_until_ready(generated[-1])
+    dt = time.perf_counter() - t0
+    print(f"[serve] cloud decoded {int(n_esc)} reqs x {args.decode_steps} "
+          f"tokens in {dt:.2f}s "
+          f"({int(n_esc) * args.decode_steps / max(dt, 1e-9):.1f} tok/s)")
+    gen = jnp.stack(generated, axis=1)
+    print(f"[serve] sample continuation (req 0): {np.asarray(gen[0])[:8]}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

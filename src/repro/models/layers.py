@@ -1,0 +1,291 @@
+"""Core transformer layers: norms, RoPE, GQA attention, MLP, MoE.
+
+All functions are pure and shape-polymorphic; they never allocate parameters
+(see ``repro.models.meta``).  Attention is computed in query chunks so the
+S x S score matrix is never materialized — a requirement for the 32k-prefill
+input shape on the production mesh.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+NEG_INF = -1e30
+
+
+# --- norms --------------------------------------------------------------------
+
+def norm_apply(cfg: ModelConfig, p, x: jax.Array) -> jax.Array:
+    """RMSNorm or LayerNorm depending on config; computed in f32."""
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# --- rotary embeddings ----------------------------------------------------------
+
+def rope_freqs(cfg: ModelConfig, positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """cos/sin tables, shape (..., rot_dim/2).  positions: int32 (...,)."""
+    rot = cfg.head_dim if cfg.rope_style == "neox" else cfg.head_dim // 2
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., rot/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(cfg: ModelConfig, x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B,S,H,hd); cos/sin: (B?,S,rot/2) broadcast over heads.
+
+    'neox'  — rotate the full head_dim, half-split layout.
+    '2d'    — (chatglm) rotate only the first half of head_dim, interleaved
+              pair layout; second half passes through.
+    """
+    if cfg.rope_style == "none":
+        return x
+    cos = cos[..., None, :]  # (B?,S,1,rot/2)
+    sin = sin[..., None, :]
+    if cfg.rope_style == "neox":
+        half = x.shape[-1] // 2
+        x1, x2 = x[..., :half], x[..., half:]
+        r1 = x1 * cos - x2 * sin
+        r2 = x2 * cos + x1 * sin
+        return jnp.concatenate([r1, r2], axis=-1).astype(x.dtype)
+    # '2d': interleaved pairs over the first half
+    rot = x.shape[-1] // 2
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1 = xr[..., 0::2]
+    x2 = xr[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    inter = jnp.stack([r1, r2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([inter, xp], axis=-1).astype(x.dtype)
+
+
+# --- attention -----------------------------------------------------------------
+
+def qkv_project(cfg: ModelConfig, p, x: jax.Array):
+    """x (B,S,D) -> q (B,S,H,hd), k,v (B,S,KV,hd)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.attn_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if cfg.qk_norm and "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _scores_to_probs(scores: jax.Array, softcap: float) -> jax.Array:
+    if softcap > 0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - jax.lax.stop_gradient(m))
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def attention(cfg: ModelConfig,
+              q: jax.Array, k: jax.Array, v: jax.Array,
+              q_pos: jax.Array, k_pos: jax.Array,
+              causal: bool = True,
+              window: Optional[int] = None,
+              chunk: int = 512) -> jax.Array:
+    """Chunked GQA attention.
+
+    q: (B,Sq,H,hd), k/v: (B,Sk,KV,hd); q_pos (Sq,) or (B,Sq), k_pos (Sk,)
+    or (B,Sk) absolute positions (k_pos may contain -1 for unwritten cache
+    slots; per-batch positions support continuous-batching decode).
+    Returns (B,Sq,H,hd).  Scans over query chunks so peak memory is
+    O(B*H*chunk*Sk) instead of O(B*H*Sq*Sk).
+    """
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    KV = k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    kg = k  # (B,Sk,KV,hd)
+    vg = v
+    if q_pos.ndim == 1:
+        q_pos = jnp.broadcast_to(q_pos[None], (B, Sq))
+    if k_pos.ndim == 1:
+        k_pos = jnp.broadcast_to(k_pos[None], (B, Sk))
+
+    # fused Pallas path (TPU target): full-causal multi-token attention with
+    # contiguous positions; everything else uses the chunked XLA path.
+    if (cfg.attn_impl == "flash" and Sq > 1 and causal and window is None
+            and Sq == k.shape[1]):
+        from repro.kernels import ops as KOPS
+        o = KOPS.flash_attention(q.transpose(0, 2, 1, 3),
+                                 k.transpose(0, 2, 1, 3),
+                                 v.transpose(0, 2, 1, 3), causal=True)
+        return o.transpose(0, 2, 1, 3)
+
+    # f32 accumulation for multi-token passes (MXU-native on TPU).  For
+    # single-token decode the XLA-CPU lowering would materialize a full f32
+    # convert of the KV cache per layer; dot in the cache dtype there and
+    # do the softmax in f32 (scores are cache-length, not cache-sized).
+    acc = jnp.float32 if Sq > 1 else q.dtype
+
+    def block(qc: jax.Array, qp: jax.Array) -> jax.Array:
+        # qc: (B,c,H,hd) -> (B,c,KV,G,hd); qp: (B,c)
+        c = qc.shape[1]
+        qr = qc.reshape(B, c, KV, G, hd)
+        s = jnp.einsum("bckgh,bskh->bckgs", qr, kg,
+                       preferred_element_type=acc).astype(jnp.float32) * scale
+        mask = (k_pos[:, None, :] >= 0)                  # (B,1,Sk)
+        if causal:
+            mask = mask & (k_pos[:, None, :] <= qp[:, :, None])
+        if window is not None:
+            mask = mask & (k_pos[:, None, :] > qp[:, :, None] - window)
+        s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+        pr = _scores_to_probs(s, cfg.logit_softcap).astype(q.dtype)
+        o = jnp.einsum("bckgs,bskh->bckgh", pr, vg,
+                       preferred_element_type=acc)
+        return o.reshape(B, c, H, hd).astype(q.dtype)
+
+    if Sq <= chunk:
+        return block(q, q_pos)
+    if Sq % chunk:  # pick the largest divisor of Sq not exceeding `chunk`
+        chunk = max(d for d in range(1, chunk + 1) if Sq % d == 0)
+        if chunk == 1:
+            return block(q, q_pos)
+    nc = Sq // chunk
+    qs = q.reshape(B, nc, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    ps = q_pos.reshape(B, nc, chunk).transpose(1, 0, 2)
+    out = jax.lax.map(lambda args: block(*args), (qs, ps))
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, hd)
+
+
+def attn_out(p, o: jax.Array) -> jax.Array:
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+# --- int8 KV-cache quantization ---------------------------------------------------
+
+def quantize_kv(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(B,S,KV,hd) -> (int8 values, (B,S,KV) f32 scales). Symmetric per-token
+    per-kv-head quantization; halves decode HBM cache traffic on TPU."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)
+            ).astype(dtype)
+
+
+# --- MLP -----------------------------------------------------------------------
+
+def mlp_apply(cfg: ModelConfig, p, x: jax.Array) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"])
+    if cfg.mlp_act == "silu":
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"])
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"])
+
+
+# --- MoE (sort-based, dropped-token, expert-parallel friendly) ------------------
+
+def moe_apply(cfg: ModelConfig, p, x: jax.Array,
+              ctx=None) -> Tuple[jax.Array, jax.Array]:
+    """x: (B,S,D) -> (y, aux_loss).
+
+    Batch-grouped sort-based dispatch with per-expert capacity: every batch
+    row dispatches its own tokens (argsort and scatter stay *local* to the
+    data shard — no global sort), then the grouped expert einsum contracts
+    data-sharded token buffers against model-sharded expert weights, which
+    is where the all-to-all happens.  Compute is O(topk * T * D * F)
+    (active params only) — faithful to deployed MoE serving.
+    """
+    c = ctx if ctx is not None else (lambda a, n: a)
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    TK = S * K
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, K)                   # (B,S,K)
+    topw = topw / jnp.sum(topw, axis=-1, keepdims=True)
+
+    # load-balance aux loss (Switch): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=(0, 1))                      # (E,)
+    ce = jnp.mean(jnp.sum(jax.nn.one_hot(topi, E, dtype=jnp.float32), axis=2),
+                  axis=(0, 1))
+    aux = E * jnp.sum(me * ce) / K
+
+    cap = int(math.ceil(cfg.capacity_factor * TK / E))
+    cap = max(8, -(-cap // 8) * 8)                         # round up to 8
+
+    eflat = topi.reshape(B, TK)                            # per-row dispatch
+    wflat = topw.reshape(B, TK)
+    tflat = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(S, dtype=jnp.int32), K)[None], (B, TK))
+    order = jnp.argsort(eflat, axis=1)
+    es = jnp.take_along_axis(eflat, order, axis=1)
+    ws = jnp.take_along_axis(wflat, order, axis=1)
+    ts = jnp.take_along_axis(tflat, order, axis=1)
+    # position within expert group = idx - first occurrence of that expert id
+    first = jax.vmap(lambda a: jnp.searchsorted(a, a, side="left"))(es)
+    pos = jnp.arange(TK, dtype=jnp.int32)[None] - first.astype(jnp.int32)
+    keep = pos < cap
+    dest = jnp.where(keep, es * cap + pos, E * cap)        # drop slot
+
+    # Index-based dispatch (perf-iteration result, EXPERIMENTS.md §Perf):
+    # scatter s32 slot->token maps (tiny) and gather the activations ONCE at
+    # the destination.  Avoids materializing or shipping the K-duplicated
+    # (B, S*K, D) flat tensors — each token's D-vector crosses the expert
+    # boundary once instead of top_k times.
+    SENT = S                                               # drop sentinel
+    slot_token = jax.vmap(
+        lambda d, t: jnp.full((E * cap,), SENT, jnp.int32
+                              ).at[d].set(t, mode="drop"))(dest, ts)
+    slot_w = jax.vmap(
+        lambda d, w: jnp.zeros((E * cap,), jnp.float32
+                               ).at[d].set(w, mode="drop"))(
+        dest, jnp.where(keep, ws, 0.0))
+    valid = (slot_token < SENT)[..., None]
+    eb = jax.vmap(lambda xr, st: jnp.take(xr, jnp.minimum(st, S - 1), axis=0)
+                  )(x, slot_token)
+    eb = jnp.where(valid, eb, 0)
+    eb = c(eb.reshape(B, E, cap, D), "moe_buf")
+
+    h = jnp.einsum("becd,edf->becf", eb, p["wi"])
+    if cfg.mlp_act == "silu":
+        g = jnp.einsum("becd,edf->becf", eb, p["wg"])
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    ob = c(jnp.einsum("becf,efd->becd", h, p["wo"]), "moe_buf")
+    ob = ob.reshape(B, E * cap, D)
+
+    # combine: weighted scatter-add straight from the expert buffers
+    y = jax.vmap(
+        lambda obr, st, wr: jnp.zeros((S, D), x.dtype).at[st].add(
+            (obr * wr[:, None]).astype(x.dtype), mode="drop"))(
+        ob, slot_token, slot_w)
+    return y, aux.astype(jnp.float32)

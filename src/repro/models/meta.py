@@ -1,0 +1,218 @@
+"""Parameter metadata: one source of truth for shapes, init, and sharding.
+
+Every parameter leaf is declared once as a :class:`ParamMeta` carrying its
+shape, *logical axis names*, and init rule.  ``init_params`` materializes
+arrays from the metadata; ``repro.distributed.sharding`` maps logical axes to
+mesh axes.  This mirrors the MaxText "logical axis rules" design and
+guarantees the init tree and the sharding tree can never drift apart.
+
+Layer-stack parameters carry a leading ``stack`` axis of size ``num_layers``
+so the trunk can be evaluated with one ``lax.scan`` regardless of depth.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+# Logical axis vocabulary -----------------------------------------------------
+# vocab, embed, heads, kv_heads, head_dim, mlp, experts, ssm_inner, ssm_heads,
+# ssm_state, groups, conv_w, stack, classes, vit
+STACK = "stack"
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamMeta:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"       # normal | scaled | zeros | ones | a_log | dt_bias
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+Tree = Dict[str, object]
+
+
+def _attn_meta(cfg: ModelConfig, stacked: int, cross: bool = False) -> Tree:
+    D, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    pre = (stacked,) if stacked else ()
+    preax = (STACK,) if stacked else ()
+    out_scale = 0.02 / math.sqrt(2 * max(cfg.num_layers, 1))
+    t: Tree = {
+        "wq": ParamMeta(pre + (D, H, hd), preax + ("embed", "heads", "head_dim")),
+        "wk": ParamMeta(pre + (D, KV, hd), preax + ("embed", "kv_heads", "head_dim")),
+        "wv": ParamMeta(pre + (D, KV, hd), preax + ("embed", "kv_heads", "head_dim")),
+        "wo": ParamMeta(pre + (H, hd, D), preax + ("heads", "head_dim", "embed"),
+                        init="normal", scale=out_scale),
+    }
+    if cfg.attn_bias:
+        t["bq"] = ParamMeta(pre + (H, hd), preax + ("heads", "head_dim"), init="zeros")
+        t["bk"] = ParamMeta(pre + (KV, hd), preax + ("kv_heads", "head_dim"), init="zeros")
+        t["bv"] = ParamMeta(pre + (KV, hd), preax + ("kv_heads", "head_dim"), init="zeros")
+    if cfg.qk_norm and not cross:
+        t["q_norm"] = ParamMeta(pre + (hd,), preax + ("head_dim",), init="ones")
+        t["k_norm"] = ParamMeta(pre + (hd,), preax + ("head_dim",), init="ones")
+    return t
+
+
+def _norm_meta(cfg: ModelConfig, stacked: int, dim: Optional[int] = None) -> Tree:
+    D = dim or cfg.d_model
+    pre = (stacked,) if stacked else ()
+    preax = (STACK,) if stacked else ()
+    t: Tree = {"scale": ParamMeta(pre + (D,), preax + ("embed",), init="ones")}
+    if cfg.norm_type == "layernorm":
+        t["bias"] = ParamMeta(pre + (D,), preax + ("embed",), init="zeros")
+    return t
+
+
+def _mlp_meta(cfg: ModelConfig, stacked: int) -> Tree:
+    D, F = cfg.d_model, cfg.d_ff
+    pre = (stacked,) if stacked else ()
+    preax = (STACK,) if stacked else ()
+    out_scale = 0.02 / math.sqrt(2 * max(cfg.num_layers, 1))
+    t: Tree = {
+        "wi": ParamMeta(pre + (D, F), preax + ("embed", "mlp")),
+        "wo": ParamMeta(pre + (F, D), preax + ("mlp", "embed"), scale=out_scale),
+    }
+    if cfg.mlp_act == "silu":
+        t["wg"] = ParamMeta(pre + (D, F), preax + ("embed", "mlp"))
+    return t
+
+
+def _moe_meta(cfg: ModelConfig, stacked: int) -> Tree:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    pre = (stacked,) if stacked else ()
+    preax = (STACK,) if stacked else ()
+    out_scale = 0.02 / math.sqrt(2 * max(cfg.num_layers, 1))
+    t: Tree = {
+        "router": ParamMeta(pre + (D, E), preax + ("embed", None)),
+        "wi": ParamMeta(pre + (E, D, F), preax + ("experts", "embed", "mlp")),
+        "wo": ParamMeta(pre + (E, F, D), preax + ("experts", "mlp", "embed"),
+                        scale=out_scale),
+    }
+    if cfg.mlp_act == "silu":
+        t["wg"] = ParamMeta(pre + (E, D, F), preax + ("experts", "embed", "mlp"))
+    return t
+
+
+def _ssm_meta(cfg: ModelConfig, stacked: int) -> Tree:
+    D = cfg.d_model
+    d_in = cfg.ssm_d_inner
+    nh, G, N, W = cfg.ssm_heads, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_conv
+    pre = (stacked,) if stacked else ()
+    preax = (STACK,) if stacked else ()
+    out_scale = 0.02 / math.sqrt(2 * max(cfg.num_layers, 1))
+    return {
+        "wz": ParamMeta(pre + (D, d_in), preax + ("embed", "ssm_inner")),
+        "wx": ParamMeta(pre + (D, d_in), preax + ("embed", "ssm_inner")),
+        "wb": ParamMeta(pre + (D, G, N), preax + ("embed", "groups", "ssm_state")),
+        "wc": ParamMeta(pre + (D, G, N), preax + ("embed", "groups", "ssm_state")),
+        "wdt": ParamMeta(pre + (D, nh), preax + ("embed", "ssm_heads")),
+        "conv_x": ParamMeta(pre + (W, d_in), preax + ("conv_w", "ssm_inner")),
+        "conv_b": ParamMeta(pre + (W, G * N), preax + ("conv_w", None)),
+        "conv_c": ParamMeta(pre + (W, G * N), preax + ("conv_w", None)),
+        "a_log": ParamMeta(pre + (nh,), preax + ("ssm_heads",), init="a_log"),
+        "d_skip": ParamMeta(pre + (nh,), preax + ("ssm_heads",), init="ones"),
+        "dt_bias": ParamMeta(pre + (nh,), preax + ("ssm_heads",), init="dt_bias"),
+        "gate_norm": ParamMeta(pre + (d_in,), preax + ("ssm_inner",), init="ones"),
+        "wo": ParamMeta(pre + (d_in, D), preax + ("ssm_inner", "embed"),
+                        scale=out_scale),
+    }
+
+
+def layer_meta(cfg: ModelConfig) -> Tree:
+    """Metadata for the (stacked) decoder trunk layer."""
+    L = cfg.num_layers
+    t: Tree = {"norm1": _norm_meta(cfg, L)}
+    if cfg.has_attn:
+        t["attn"] = _attn_meta(cfg, L)
+    if cfg.has_ssm:
+        t["ssm"] = _ssm_meta(cfg, L)
+    if cfg.is_encdec:  # cross attention in decoder layers
+        t["cross"] = _attn_meta(cfg, L, cross=True)
+        t["norm_cross"] = _norm_meta(cfg, L)
+    if cfg.d_ff > 0:
+        t["norm2"] = _norm_meta(cfg, L)
+        t["moe" if cfg.is_moe else "mlp"] = (
+            _moe_meta(cfg, L) if cfg.is_moe else _mlp_meta(cfg, L))
+    return t
+
+
+def encoder_layer_meta(cfg: ModelConfig) -> Tree:
+    L = cfg.num_enc_layers
+    return {
+        "norm1": _norm_meta(cfg, L),
+        "attn": _attn_meta(cfg, L),
+        "norm2": _norm_meta(cfg, L),
+        "mlp": _mlp_meta(cfg, L),
+    }
+
+
+def model_meta(cfg: ModelConfig) -> Tree:
+    """Full parameter tree metadata for one model."""
+    D, V = cfg.d_model, cfg.vocab_size
+    t: Tree = {
+        "embed": ParamMeta((V, D), ("vocab", "embed"), scale=1.0 / math.sqrt(D)),
+        "layers": layer_meta(cfg),
+        "final_norm": _norm_meta(cfg, 0),
+        "cls_head": {
+            "w": ParamMeta((D, cfg.num_query_classes), ("embed", None)),
+            "b": ParamMeta((cfg.num_query_classes,), (None,), init="zeros"),
+        },
+    }
+    if not cfg.tie_embeddings:
+        t["lm_head"] = ParamMeta((D, V), ("embed", "vocab"))
+    if cfg.is_encdec:
+        t["enc_layers"] = encoder_layer_meta(cfg)
+        t["enc_norm"] = _norm_meta(cfg, 0)
+    if cfg.num_img_tokens > 0:
+        t["img_proj"] = ParamMeta((1024, D), ("vit", "embed"))
+    return t
+
+
+# --- materialization ---------------------------------------------------------
+
+def _init_leaf(meta: ParamMeta, key: jax.Array, dtype) -> jax.Array:
+    if meta.init == "zeros":
+        return jnp.zeros(meta.shape, dtype)
+    if meta.init == "ones":
+        return jnp.ones(meta.shape, dtype)
+    if meta.init == "a_log":
+        # A in [1, 16) -> a_log = log(A); S4/Mamba convention A = -exp(a_log)
+        u = jax.random.uniform(key, meta.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dtype)
+    if meta.init == "dt_bias":
+        # dt ~ logU[1e-3, 1e-1]; bias = softplus^{-1}(dt)
+        u = jax.random.uniform(key, meta.shape, jnp.float32)
+        dt = jnp.exp(u * (math.log(1e-1) - math.log(1e-3)) + math.log(1e-3))
+        return jnp.log(jnp.expm1(dt)).astype(dtype)
+    return (jax.random.normal(key, meta.shape, jnp.float32) * meta.scale).astype(dtype)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, dtype=jnp.float32) -> Tree:
+    metas, treedef = jax.tree.flatten(
+        model_meta(cfg), is_leaf=lambda x: isinstance(x, ParamMeta))
+    keys = jax.random.split(key, len(metas))
+    leaves = [_init_leaf(m, k, dtype) for m, k in zip(metas, keys)]
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.float32) -> Tree:
+    """ShapeDtypeStruct tree (no allocation) — used by the dry-run."""
+    return jax.tree.map(
+        lambda m: jax.ShapeDtypeStruct(m.shape, dtype),
+        model_meta(cfg), is_leaf=lambda x: isinstance(x, ParamMeta))
+
+
+def param_count(cfg: ModelConfig) -> int:
+    metas = jax.tree.leaves(model_meta(cfg),
+                            is_leaf=lambda x: isinstance(x, ParamMeta))
+    return int(sum(np.prod(m.shape) for m in metas))

@@ -1,0 +1,219 @@
+"""Mamba-2 (SSD — state-space duality) block, chunked for TPU.
+
+Implements the chunked SSD algorithm of arXiv:2405.21060: within a chunk the
+quadratic ("attention-like") dual form runs on the MXU; across chunks a short
+`lax.scan` carries the (heads, head_dim, state) recurrent state.  Decode is a
+single O(1) state update.
+
+Shapes (per layer):
+  x   (B, S, nh, hd)    inputs after in-proj + causal conv + SiLU
+  dt  (B, S, nh)        softplus(dt_raw + dt_bias)
+  A   (nh,)             negative reals, A = -exp(a_log)
+  Bm  (B, S, G, N)      input matrix  (G groups, N = ssm_state)
+  Cm  (B, S, G, N)      output matrix
+State: (B, nh, hd, N)
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import rms_norm
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum_{k=j+1..i} a[..., k], -inf for j>i.
+
+    a: (..., Q) log-decays.  Returns (..., Q, Q).
+    """
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)                      # (..., Q)
+    diff = cs[..., :, None] - cs[..., None, :]        # cum_i - cum_j
+    ii = jnp.arange(Q)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(cfg: ModelConfig,
+                x: jax.Array, dt: jax.Array, A: jax.Array,
+                Bm: jax.Array, Cm: jax.Array, D_skip: jax.Array,
+                init_state: Optional[jax.Array] = None,
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,nh,hd), final_state (B,nh,hd,N))."""
+    B, S, nh, hd = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Q = min(cfg.ssm_chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    rep = nh // G                                        # heads per group
+
+    f32 = jnp.float32
+    xf = x.astype(f32)
+    dtf = dt.astype(f32)
+    a = dtf * A.astype(f32)[None, None, :]               # (B,S,nh) log-decay <= 0
+
+    # chunk views
+    xc = xf.reshape(B, nc, Q, nh, hd)
+    dc = dtf.reshape(B, nc, Q, nh)
+    ac = a.reshape(B, nc, Q, nh)
+    Bc = Bm.astype(f32).reshape(B, nc, Q, G, N)
+    Cc = Cm.astype(f32).reshape(B, nc, Q, G, N)
+    Bh = jnp.repeat(Bc, rep, axis=3)                     # (B,nc,Q,nh,N)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    # ---- intra-chunk (quadratic dual form) ----------------------------------
+    # L[i,j] = exp(sum_{j<k<=i} a_k); scores = (C_i . B_j) L_ij dt_j
+    seg = _segsum(ac.transpose(0, 1, 3, 2))              # (B,nc,nh,Q,Q)
+    L = jnp.exp(seg)
+    cb = jnp.einsum("bnqhs,bnkhs->bnhqk", Ch, Bh)        # (B,nc,nh,Q,Q)
+    W = cb * L * dc.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    y_intra = jnp.einsum("bnhqk,bnkhd->bnqhd", W, xc)
+
+    # ---- chunk-state contributions -------------------------------------------
+    cum = jnp.cumsum(ac, axis=2)                         # (B,nc,Q,nh)
+    last = cum[:, :, -1:, :]
+    decay_to_end = jnp.exp(last - cum)                   # exp(sum_{k>j} a_k)
+    # state_c = sum_j decay_to_end_j * dt_j * B_j (x) x_j   -> (B,nc,nh,hd,N)
+    contrib = jnp.einsum("bnqh,bnqh,bnqhs,bnqhd->bnhds",
+                         decay_to_end, dc, Bh, xc)
+    chunk_decay = jnp.exp(jnp.sum(ac, axis=2))           # (B,nc,nh)
+
+    # ---- inter-chunk recurrence (short sequential scan over nc) -------------
+    s0 = (jnp.zeros((B, nh, hd, N), f32) if init_state is None
+          else init_state.astype(f32))
+
+    def step(s, inp):
+        dec, con = inp                                   # (B,nh), (B,nh,hd,N)
+        s_in = s
+        s = s * dec[:, :, None, None] + con
+        return s, s_in
+
+    (s_fin, s_ins) = jax.lax.scan(
+        step, s0, (chunk_decay.transpose(1, 0, 2), contrib.transpose(1, 0, 2, 3, 4)))
+    states_in = s_ins.transpose(1, 0, 2, 3, 4)           # (B,nc,nh,hd,N) state at chunk start
+
+    # ---- inter-chunk output: y_i += C_i . (exp(cum_i) * state_in) ------------
+    y_inter = jnp.einsum("bnqhs,bnhds,bnqh->bnqhd",
+                         Ch, states_in, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(B, S, nh, hd)
+    y = y + xf * D_skip.astype(f32)[None, None, :, None]
+    return y.astype(x.dtype), s_fin
+
+
+def ssd_reference(cfg: ModelConfig,
+                  x: jax.Array, dt: jax.Array, A: jax.Array,
+                  Bm: jax.Array, Cm: jax.Array, D_skip: jax.Array,
+                  init_state: Optional[jax.Array] = None,
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Naive per-step recurrence oracle (h' = h*exp(dt*A) + dt*B(x)x)."""
+    B, S, nh, hd = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = nh // G
+    f32 = jnp.float32
+    s = (jnp.zeros((B, nh, hd, N), f32) if init_state is None
+         else init_state.astype(f32))
+
+    def step(s, t):
+        xt = x[:, t].astype(f32)                         # (B,nh,hd)
+        dtt = dt[:, t].astype(f32)                       # (B,nh)
+        Bt = jnp.repeat(Bm[:, t].astype(f32), rep, axis=1)  # (B,nh,N)
+        Ct = jnp.repeat(Cm[:, t].astype(f32), rep, axis=1)
+        dec = jnp.exp(dtt * A.astype(f32)[None, :])
+        s = s * dec[:, :, None, None] + jnp.einsum(
+            "bh,bhn,bhd->bhdn", dtt, Bt, xt)
+        y = jnp.einsum("bhn,bhdn->bhd", Ct, s)
+        y = y + xt * D_skip.astype(f32)[None, :, None]
+        return s, y
+
+    s, ys = jax.lax.scan(step, s, jnp.arange(S))
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), s
+
+
+def ssd_decode_step(cfg: ModelConfig,
+                    state: jax.Array,
+                    x: jax.Array, dt: jax.Array, A: jax.Array,
+                    Bm: jax.Array, Cm: jax.Array, D_skip: jax.Array,
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """One-token update.  x (B,nh,hd), dt (B,nh), Bm/Cm (B,G,N), state (B,nh,hd,N)."""
+    nh = x.shape[1]
+    rep = nh // Bm.shape[1]
+    f32 = jnp.float32
+    Bt = jnp.repeat(Bm.astype(f32), rep, axis=1)
+    Ct = jnp.repeat(Cm.astype(f32), rep, axis=1)
+    dec = jnp.exp(dt.astype(f32) * A.astype(f32)[None, :])
+    state = state.astype(f32) * dec[:, :, None, None] + jnp.einsum(
+        "bh,bhn,bhd->bhdn", dt.astype(f32), Bt, x.astype(f32))
+    y = jnp.einsum("bhn,bhdn->bhd", Ct, state)
+    y = y + x.astype(f32) * D_skip.astype(f32)[None, :, None]
+    return y.astype(x.dtype), state
+
+
+# --- causal depthwise conv ------------------------------------------------------
+
+def causal_conv(x: jax.Array, w: jax.Array,
+                cache: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d.
+
+    x: (B,S,C), w: (W,C).  cache: (B,W-1,C) previous context or None (zeros).
+    Returns (y (B,S,C), new_cache (B,W-1,C)).
+    """
+    B, S, C = x.shape
+    W = w.shape[0]
+    if cache is None:
+        cache = jnp.zeros((B, W - 1, C), x.dtype)
+    xp = jnp.concatenate([cache, x], axis=1)             # (B, S+W-1, C)
+    y = jnp.zeros((B, S, C), jnp.float32)
+    for i in range(W):                                   # W<=4: unrolled shifts
+        y = y + xp[:, i:i + S, :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    new_cache = xp[:, S:, :] if S >= W - 1 else jnp.concatenate(
+        [cache[:, S:], x], axis=1)
+    return y.astype(x.dtype), new_cache
+
+
+def ssm_block(cfg: ModelConfig, p, x: jax.Array,
+              conv_cache=None, ssd_state=None, decode: bool = False):
+    """Full Mamba-2 mixer: in-proj -> conv -> SSD -> gated RMSNorm -> out-proj.
+
+    x: (B,S,D).  Returns (y (B,S,D), (new_conv_cache, new_ssd_state)).
+    conv_cache: dict(x=,b=,c=) each (B,W-1,*) or None; ssd_state (B,nh,hd,N) or None.
+    """
+    B, S, D = x.shape
+    nh, hd, G, N = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_ngroups, cfg.ssm_state
+    d_in = cfg.ssm_d_inner
+
+    z = jnp.einsum("bsd,de->bse", x, p["wz"])
+    xin = jnp.einsum("bsd,de->bse", x, p["wx"])
+    bin_ = jnp.einsum("bsd,dgn->bsgn", x, p["wb"]).reshape(B, S, G * N)
+    cin = jnp.einsum("bsd,dgn->bsgn", x, p["wc"]).reshape(B, S, G * N)
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, p["wdt"])
+
+    cc = conv_cache or {}
+    xc, ncx = causal_conv(xin, p["conv_x"], cc.get("x"))
+    bc, ncb = causal_conv(bin_, p["conv_b"], cc.get("b"))
+    cc_, ncc = causal_conv(cin, p["conv_c"], cc.get("c"))
+    xc = jax.nn.silu(xc)
+    bc = jax.nn.silu(bc)
+    cc_ = jax.nn.silu(cc_)
+
+    xh = xc.reshape(B, S, nh, hd)
+    Bm = bc.reshape(B, S, G, N)
+    Cm = cc_.reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    if decode:
+        y1, new_state = ssd_decode_step(
+            cfg, ssd_state, xh[:, 0], dt[:, 0], A, Bm[:, 0], Cm[:, 0], p["d_skip"])
+        y = y1[:, None]
+    else:
+        y, new_state = ssd_chunked(cfg, xh, dt.astype(xh.dtype), A, Bm, Cm,
+                                   p["d_skip"], init_state=ssd_state)
+    y = y.reshape(B, S, d_in)
+    # gated RMSNorm (mamba2): norm(y) * silu(z)
+    yn = rms_norm(y, p["gate_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", yn, p["wo"])
+    return out, ({"x": ncx, "b": ncb, "c": ncc}, new_state)

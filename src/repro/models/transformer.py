@@ -1,0 +1,417 @@
+"""Trunk assembly: decoder blocks, scan-over-layers, prefill/decode caches.
+
+One ``decoder_block`` covers all six architecture families via config flags:
+  dense       attn + MLP                       (qwen1.5, command-r, chatglm3, qwen3)
+  moe         attn + sort-based MoE            (phi3.5-moe, granite-moe)
+  ssm         Mamba-2 mixer only               (mamba2)
+  hybrid      parallel attn + SSM heads + MLP  (hymba)
+  audio       enc-dec w/ cross-attn            (whisper; conv frontend stubbed)
+  vlm         dense + image-embedding prefix   (internvl2; ViT stubbed)
+
+The trunk is evaluated with a single ``lax.scan`` over stacked layer params so
+HLO size is depth-independent (compile-time requirement for the dry-run).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+Cache = Dict[str, Any]
+
+
+def _cf(ctx) -> Callable[[jax.Array, str], jax.Array]:
+    return ctx if ctx is not None else (lambda x, name: x)
+
+
+def maybe_dequant(tree, dtype=jnp.bfloat16):
+    """Dequantize int8-served weights ({'q','s'} leaves) on the fly.
+
+    Called inside scan bodies so only one layer's weights are ever resident
+    in bf16 (see distributed/quantize.py).  No-op for fp params.
+    """
+    from repro.distributed import quantize as QZ
+    return QZ.dequant_tree(tree, dtype)
+
+
+# --- embeddings / positions -----------------------------------------------------
+
+def embed_tokens(cfg: ModelConfig, params: Params, tokens: jax.Array) -> jax.Array:
+    emb = params["embed"]
+    if isinstance(emb, dict):        # int8-served: gather rows, then scale
+        rows = jnp.take(emb["q"], tokens, axis=0).astype(jnp.float32)
+        return (rows * emb["s"]).astype(jnp.bfloat16)
+    return jnp.take(emb, tokens, axis=0)
+
+
+def sinusoid_pos(positions: jax.Array, d: int) -> jax.Array:
+    half = d // 2
+    freq = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[:, None].astype(jnp.float32) * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# --- single decoder block --------------------------------------------------------
+
+def decoder_block(cfg: ModelConfig, lp: Params, x: jax.Array, *,
+                  q_pos: jax.Array,
+                  k_pos: Optional[jax.Array] = None,
+                  cache: Optional[Cache] = None,
+                  decode: bool = False,
+                  window: Optional[int] = None,
+                  enc_out: Optional[jax.Array] = None,
+                  ctx=None) -> Tuple[jax.Array, Optional[Cache], jax.Array]:
+    """Apply one layer.  Returns (x, new_cache, aux_loss)."""
+    c = _cf(ctx)
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Cache = {}
+    h = L.norm_apply(cfg, lp["norm1"], x)
+
+    mix = jnp.zeros_like(x)
+    if cfg.has_attn:
+        q, k, v = L.qkv_project(cfg, lp["attn"], h)
+        q = c(q, "act_q")
+        cos_q, sin_q = L.rope_freqs(cfg, q_pos)
+        q = L.apply_rope(cfg, q, cos_q, sin_q)
+        int8_kv = cfg.kv_cache_dtype == "int8"
+        if decode:
+            assert cache is not None
+            kc, vc = cache["k"], cache["v"]          # (B,W,KV,hd) — attn layout
+            B = kc.shape[0]
+            W = kc.shape[1]
+            rows = jnp.arange(B)
+            slot = q_pos[:, 0] % W                   # per-sequence positions
+            cos_k, sin_k = L.rope_freqs(cfg, q_pos)
+            k = L.apply_rope(cfg, k, cos_k, sin_k)
+            if int8_kv:
+                kq, ks = L.quantize_kv(k)
+                vq, vs = L.quantize_kv(v)
+                kc = kc.at[rows, slot].set(kq[:, 0])
+                vc = vc.at[rows, slot].set(vq[:, 0])
+                ksc = cache["k_scale"].at[rows, slot].set(ks[:, 0])
+                vsc = cache["v_scale"].at[rows, slot].set(vs[:, 0])
+                new_cache.update(k=kc, v=vc, k_scale=ksc, v_scale=vsc)
+                k_read = L.dequantize_kv(kc, ksc, q.dtype)
+                v_read = L.dequantize_kv(vc, vsc, q.dtype)
+            else:
+                kc = kc.at[rows, slot].set(k[:, 0])
+                vc = vc.at[rows, slot].set(v[:, 0])
+                new_cache["k"], new_cache["v"] = kc, vc
+                k_read, v_read = kc, vc
+            o = L.attention(cfg, q, k_read, v_read, q_pos, k_pos, causal=True,
+                            window=window)
+        else:
+            cos_k, sin_k = L.rope_freqs(cfg, q_pos)
+            k = L.apply_rope(cfg, k, cos_k, sin_k)
+            if cache is not None:                    # prefill: write cache
+                if int8_kv:
+                    kq, ks = L.quantize_kv(k)
+                    vq, vs = L.quantize_kv(v)
+                    new_cache["k"] = jax.lax.dynamic_update_slice(
+                        cache["k"], kq, (0, 0, 0, 0))
+                    new_cache["v"] = jax.lax.dynamic_update_slice(
+                        cache["v"], vq, (0, 0, 0, 0))
+                    new_cache["k_scale"] = jax.lax.dynamic_update_slice(
+                        cache["k_scale"], ks, (0, 0, 0))
+                    new_cache["v_scale"] = jax.lax.dynamic_update_slice(
+                        cache["v_scale"], vs, (0, 0, 0))
+                else:
+                    new_cache["k"] = jax.lax.dynamic_update_slice(
+                        cache["k"], k, (0, 0, 0, 0))
+                    new_cache["v"] = jax.lax.dynamic_update_slice(
+                        cache["v"], v, (0, 0, 0, 0))
+            o = L.attention(cfg, q, k, v, q_pos, q_pos, causal=True, window=window)
+        mix = mix + L.attn_out(lp["attn"], c(o, "act_q"))
+
+    if cfg.has_ssm:
+        conv_cache = cache.get("conv") if cache else None
+        ssd_state = cache.get("ssd") if cache else None
+        y, (ncv, nst) = S.ssm_block(cfg, lp["ssm"], h, conv_cache=conv_cache,
+                                    ssd_state=ssd_state, decode=decode)
+        if cache is not None:
+            new_cache["conv"], new_cache["ssd"] = ncv, nst
+        if cfg.has_attn:                             # hymba: fuse parallel heads
+            mix = 0.5 * (mix + y)
+        else:
+            mix = y
+
+    if cfg.parallel_block and cfg.d_ff > 0:          # command-r style
+        mlp_y = L.mlp_apply(cfg, lp["mlp"], h)
+        return x + mix + mlp_y, (new_cache or None), aux
+
+    x = x + mix
+
+    if cfg.is_encdec:                                # cross attention
+        hc = L.norm_apply(cfg, lp["norm_cross"], x)
+        cp = lp["cross"]
+        q = jnp.einsum("bsd,dhk->bshk", hc, cp["wq"])
+        if cfg.attn_bias:
+            q = q + cp["bq"]
+        if decode or enc_out is None:
+            ck_t, cv_t = cache["cross_k"], cache["cross_v"]   # (B,Se,KV,hd)
+            new_cache["cross_k"], new_cache["cross_v"] = ck_t, cv_t
+        else:
+            ck_t = jnp.einsum("bsd,dhk->bshk", enc_out, cp["wk"])
+            cv_t = jnp.einsum("bsd,dhk->bshk", enc_out, cp["wv"])
+            if cfg.attn_bias:
+                ck_t = ck_t + cp["bk"]
+                cv_t = cv_t + cp["bv"]
+            if cache is not None:
+                new_cache["cross_k"] = ck_t
+                new_cache["cross_v"] = cv_t
+        e_pos = jnp.arange(ck_t.shape[1], dtype=jnp.int32)
+        o = L.attention(cfg, q, ck_t, cv_t, q_pos, e_pos, causal=False)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, cp["wo"])
+
+    if cfg.d_ff > 0:
+        h2 = L.norm_apply(cfg, lp["norm2"], x)
+        if cfg.is_moe:
+            y, a = L.moe_apply(cfg, lp["moe"], h2, ctx=ctx)
+            aux = aux + a
+        else:
+            y = L.mlp_apply(cfg, lp["mlp"], c(h2, "resid"))
+        x = x + y
+
+    return c(x, "resid"), (new_cache or None), aux
+
+
+# --- encoder (whisper) ------------------------------------------------------------
+
+def encoder_block(cfg: ModelConfig, lp: Params, x: jax.Array, ctx=None) -> jax.Array:
+    c = _cf(ctx)
+    h = L.norm_apply(cfg, lp["norm1"], x)
+    pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+    q = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wv"])
+    if cfg.attn_bias:
+        q = q + lp["attn"]["bq"]
+        k = k + lp["attn"]["bk"]
+        v = v + lp["attn"]["bv"]
+    o = L.attention(cfg, q, k, v, pos, pos, causal=False)
+    x = x + L.attn_out(lp["attn"], o)
+    h2 = L.norm_apply(cfg, lp["norm2"], x)
+    gelu_cfg = cfg  # whisper mlp: gelu non-gated handled by cfg.mlp_act
+    x = x + L.mlp_apply(gelu_cfg, lp["mlp"], h2)
+    return c(x, "resid")
+
+
+def encode(cfg: ModelConfig, params: Params, frames: jax.Array,
+           remat: bool = False, ctx=None) -> jax.Array:
+    """frames: (B, enc_seq, D) stubbed conv-frontend output."""
+    pos = sinusoid_pos(jnp.arange(frames.shape[1], dtype=jnp.int32), cfg.d_model)
+    x = frames + pos[None].astype(frames.dtype)
+
+    def body(x, lp):
+        return encoder_block(cfg, maybe_dequant(lp, x.dtype), x, ctx=ctx), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return L.norm_apply(cfg, params["enc_norm"], x)
+
+
+# --- full trunk --------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
+            img_embeds: Optional[jax.Array] = None,
+            audio_frames: Optional[jax.Array] = None,
+            window: Optional[int] = None,
+            remat: bool = False,
+            remat_policy: Optional[str] = None,
+            ctx=None) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward (train / no-cache prefill).
+
+    Returns (hidden (B,S,D), aux_loss).
+    """
+    c = _cf(ctx)
+    x = embed_tokens(cfg, params, tokens)
+    if cfg.num_img_tokens > 0:
+        assert img_embeds is not None
+        pe = jnp.einsum("bnv,vd->bnd", img_embeds,
+                maybe_dequant(params["img_proj"], x.dtype)).astype(x.dtype)
+        x = jnp.concatenate([pe, x], axis=1)
+    enc_out = None
+    if cfg.is_encdec:
+        assert audio_frames is not None
+        enc_out = encode(cfg, params, audio_frames, remat=remat, ctx=ctx)
+        x = x + sinusoid_pos(jnp.arange(x.shape[1], dtype=jnp.int32),
+                             cfg.d_model)[None].astype(x.dtype)
+    x = c(x, "resid")
+    q_pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def body(carry, lp):
+        x, aux = carry
+        lp = maybe_dequant(lp, x.dtype)
+        x, _, a = decoder_block(cfg, lp, x, q_pos=q_pos, window=window,
+                                enc_out=enc_out, ctx=ctx)
+        return (x, aux + a), None
+
+    if remat:
+        policy = None
+        if remat_policy == "dots":
+            policy = jax.checkpoint_policies.checkpoint_dots
+        elif remat_policy == "dots_no_batch":
+            policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        body = jax.checkpoint(body, prevent_cse=False, policy=policy)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               params["layers"])
+    x = L.norm_apply(cfg, params["final_norm"], x)
+    return x, aux
+
+
+def lm_logits(cfg: ModelConfig, params: Params, hidden: jax.Array, ctx=None) -> jax.Array:
+    c = _cf(ctx)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    if isinstance(head, dict):
+        head = maybe_dequant(head, hidden.dtype)
+    if cfg.tie_embeddings:
+        head = head.T
+    return c(jnp.einsum("bsd,dv->bsv", hidden, head), "logits")
+
+
+def classify(cfg: ModelConfig, params: Params, hidden: jax.Array) -> jax.Array:
+    """CQ-specific classifier head (SurveilEdge cascade): mean-pool -> linear."""
+    pooled = jnp.mean(hidden.astype(jnp.float32), axis=1)
+    head = maybe_dequant(params["cls_head"], jnp.float32)
+    w, b = head["w"], head["b"]
+    return pooled @ w.astype(jnp.float32) + b.astype(jnp.float32)
+
+
+# --- caches -------------------------------------------------------------------------
+
+def make_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               dtype=jnp.float32, abstract: bool = False) -> Cache:
+    """Build a (layer-stacked) decode cache; ``abstract`` -> ShapeDtypeStructs."""
+    Lc, KV, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+
+    def mk(shape, dt):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dt)
+        return jnp.zeros(shape, dt)
+
+    # per-sequence positions/validity: continuous batching admits sequences
+    # with different prefix lengths into one decode batch
+    cache: Cache = {"pos": mk((batch,), jnp.int32),
+                    "kpos": mk((batch, cache_len), jnp.int32)}
+    per: Cache = {}
+    if cfg.has_attn:
+        # attention-native layout (B,S,KV,hd): no transposes on the hot path
+        kv_dt = jnp.int8 if cfg.kv_cache_dtype == "int8" else dtype
+        per["k"] = mk((Lc, batch, cache_len, KV, hd), kv_dt)
+        per["v"] = mk((Lc, batch, cache_len, KV, hd), kv_dt)
+        if cfg.kv_cache_dtype == "int8":
+            # per-(token, kv-head) dynamic scales
+            per["k_scale"] = mk((Lc, batch, cache_len, KV), jnp.float32)
+            per["v_scale"] = mk((Lc, batch, cache_len, KV), jnp.float32)
+    if cfg.has_ssm:
+        W, d_in = cfg.ssm_conv, cfg.ssm_d_inner
+        GN = cfg.ssm_ngroups * cfg.ssm_state
+        per["conv"] = {
+            "x": mk((Lc, batch, W - 1, d_in), dtype),
+            "b": mk((Lc, batch, W - 1, GN), dtype),
+            "c": mk((Lc, batch, W - 1, GN), dtype),
+        }
+        per["ssd"] = mk((Lc, batch, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state),
+                        jnp.float32)
+    if cfg.is_encdec:
+        per["cross_k"] = mk((Lc, batch, cfg.enc_seq, KV, hd), dtype)
+        per["cross_v"] = mk((Lc, batch, cfg.enc_seq, KV, hd), dtype)
+    cache["layers"] = per
+    if not abstract and cfg.has_attn:
+        cache["kpos"] = jnp.full((batch, cache_len), -1, jnp.int32)
+    return cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Cache,
+                token: jax.Array, *, window: Optional[int] = None,
+                ctx=None) -> Tuple[jax.Array, Cache]:
+    """One-token decode.  token: (B,) int32.  Returns (logits (B,V), new cache).
+
+    ``cache['pos']`` is per-sequence (B,): slots may sit at different
+    positions (continuous batching)."""
+    c = _cf(ctx)
+    pos = cache["pos"]                                   # (B,)
+    B = token.shape[0]
+    x = embed_tokens(cfg, params, token[:, None])
+    if cfg.is_encdec:
+        x = x + sinusoid_pos(pos.astype(jnp.int32),
+                             cfg.d_model)[:, None].astype(x.dtype)
+    x = c(x, "resid")
+    q_pos = pos[:, None].astype(jnp.int32)               # (B,1)
+
+    kpos = cache["kpos"]                                 # (B, W)
+    if cfg.has_attn:
+        cache_len = kpos.shape[1]
+        kpos = kpos.at[jnp.arange(B), pos % cache_len].set(pos)
+
+    def body(x, xs):
+        lp, cslice = xs
+        lp = maybe_dequant(lp, x.dtype)
+        x, ncache, _ = decoder_block(cfg, lp, x, q_pos=q_pos, k_pos=kpos,
+                                     cache=cslice, decode=True, window=window,
+                                     ctx=ctx)
+        return x, ncache
+
+    x, new_layer_cache = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+    x = L.norm_apply(cfg, params["final_norm"], x)
+    logits = lm_logits(cfg, params, x, ctx=ctx)[:, 0]
+    new_cache = {"pos": pos + 1, "kpos": kpos, "layers": new_layer_cache}
+    return logits, new_cache
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
+            cache_len: Optional[int] = None,
+            audio_frames: Optional[jax.Array] = None,
+            img_embeds: Optional[jax.Array] = None,
+            window: Optional[int] = None,
+            ctx=None) -> Tuple[jax.Array, Cache]:
+    """Full-sequence forward that also writes the decode cache.
+
+    Returns (last-position logits (B,V), cache ready for decode_step).
+    """
+    c = _cf(ctx)
+    B, Sq = tokens.shape
+    x = embed_tokens(cfg, params, tokens)
+    if cfg.num_img_tokens > 0:
+        pe = jnp.einsum("bnv,vd->bnd", img_embeds,
+                maybe_dequant(params["img_proj"], x.dtype)).astype(x.dtype)
+        x = jnp.concatenate([pe, x], axis=1)
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = encode(cfg, params, audio_frames, ctx=ctx)
+        x = x + sinusoid_pos(jnp.arange(x.shape[1], dtype=jnp.int32),
+                             cfg.d_model)[None].astype(x.dtype)
+    S_tot = x.shape[1]
+    # the cache must hold the full prefix incl. any image-token prefix
+    # (callers specify cache_len in text positions)
+    if cache_len is not None and cfg.num_img_tokens:
+        cache_len += cfg.num_img_tokens
+    cache_len = max(cache_len or S_tot, S_tot)
+    q_pos = jnp.arange(S_tot, dtype=jnp.int32)
+    cache = make_cache(cfg, B, cache_len, dtype=x.dtype)
+    kpos = jnp.broadcast_to(
+        jnp.where(jnp.arange(cache_len) < S_tot,
+                  jnp.arange(cache_len, dtype=jnp.int32), -1),
+        (B, cache_len))
+
+    def body(x, xs):
+        lp, cslice = xs
+        lp = maybe_dequant(lp, x.dtype)
+        x, ncache, _ = decoder_block(cfg, lp, x, q_pos=q_pos, cache=cslice,
+                                     decode=False, window=window,
+                                     enc_out=enc_out, ctx=ctx)
+        return x, ncache
+
+    x, new_layer_cache = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+    x = L.norm_apply(cfg, params["final_norm"], x)
+    logits = lm_logits(cfg, params, x[:, -1:], ctx=ctx)[:, 0]
+    return logits, {"pos": jnp.full((B,), S_tot, jnp.int32), "kpos": kpos,
+                    "layers": new_layer_cache}

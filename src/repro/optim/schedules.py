@@ -1,0 +1,20 @@
+"""Learning-rate schedules (multipliers in [0,1]; compose with AdamWConfig.lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_with_warmup(warmup_steps: int, total_steps: int, floor: float = 0.1):
+    def sched(step):
+        s = step.astype(jnp.float32)
+        warm = s / max(warmup_steps, 1)
+        prog = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup_steps, warm, cos)
+    return sched
+
+
+def linear_warmup(warmup_steps: int):
+    def sched(step):
+        return jnp.minimum(step.astype(jnp.float32) / max(warmup_steps, 1), 1.0)
+    return sched

@@ -1,0 +1,64 @@
+"""In-process publish/subscribe message bus (the MQTT/Mosquitto analogue).
+
+Topic-based, synchronous delivery, wildcard '#' suffix supported — enough to
+mirror the paper's control plane (parameter updates, task dispatch, results)
+without a broker dependency.
+"""
+from __future__ import annotations
+
+import collections
+import fnmatch
+from typing import Any, Callable, DefaultDict, Dict, List, Tuple
+
+Handler = Callable[[str, Any], None]
+
+
+class Bus:
+    def __init__(self) -> None:
+        self._subs: List[Tuple[str, Handler]] = []
+        self.delivered = 0
+        self.published_bytes = 0
+
+    def subscribe(self, pattern: str, handler: Handler) -> None:
+        self._subs.append((pattern, handler))
+
+    def publish(self, topic: str, payload: Any, nbytes: int = 0) -> int:
+        """Deliver to all matching subscribers; returns delivery count."""
+        self.published_bytes += nbytes
+        n = 0
+        for pattern, handler in list(self._subs):
+            if _match(pattern, topic):
+                handler(topic, payload)
+                n += 1
+        self.delivered += n
+        return n
+
+
+def _match(pattern: str, topic: str) -> bool:
+    if pattern.endswith("#"):
+        return topic.startswith(pattern[:-1])
+    return fnmatch.fnmatch(topic, pattern)
+
+
+class ParamDB:
+    """Replicated parameter store (the SQLite analogue).
+
+    Every write publishes on 'params/<key>'; every node holds the same view
+    (synchronous replication — the paper's update-triggers-update semantics).
+    """
+
+    def __init__(self, bus: Bus) -> None:
+        self._bus = bus
+        self._store: Dict[str, Any] = {}
+        self.writes = 0
+
+    def put(self, key: str, value: Any) -> None:
+        self._store[key] = value
+        self.writes += 1
+        self._bus.publish(f"params/{key}", value, nbytes=8)
+
+    def get(self, key: str, default: Any = None) -> Any:
+        return self._store.get(key, default)
+
+    def snapshot(self) -> Dict[str, Any]:
+        return dict(self._store)

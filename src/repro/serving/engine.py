@@ -1,0 +1,192 @@
+"""Slot-based continuous-batching decode engine with a cascade front-end.
+
+The production serving path for the assigned architectures: a fixed-size
+decode batch ("slots") runs one fused decode_step per tick; finished or
+empty slots are refilled from the request queue (prefill on admission), so
+the big model never idles while requests trickle in — the LLM-serving
+analogue of the paper's "keep the cloud busy with exactly the work the edge
+couldn't settle".
+
+Requests enter through the SurveilEdge triage: the edge CQ model scores
+each prompt, confident ones are answered at the edge (classification
+serving), the rest are admitted to the cloud decode batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cascade as C
+from repro.core.thresholds import ThresholdState
+from repro.models import meta as M
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray                  # (S,) prompt
+    max_new: int = 16
+    # filled by the engine:
+    output: Optional[np.ndarray] = None
+    route: str = "pending"              # edge_accept | edge_reject | cloud
+    ticks_waited: int = 0
+
+
+@dataclasses.dataclass
+class SlotState:
+    rid: int = -1
+    remaining: int = 0
+    generated: Optional[List[int]] = None
+
+    @property
+    def free(self) -> bool:
+        return self.rid < 0
+
+
+class DecodeEngine:
+    """Continuous batching over a fixed slot count for ONE model."""
+
+    def __init__(self, cfg: ModelConfig, params, *, slots: int,
+                 cache_len: int, window: Optional[int] = None):
+        self.cfg = cfg
+        self.params = params
+        self.slots = [SlotState() for _ in range(slots)]
+        self.cache_len = cache_len
+        self.window = window
+        self.cache = T.make_cache(cfg, slots, cache_len, dtype=jnp.float32)
+        self.tokens = jnp.zeros((slots,), jnp.int32)
+        self.ticks = 0
+
+        self._prefill_1 = jax.jit(
+            lambda p, t: T.prefill(cfg, p, t, cache_len=cache_len,
+                                   window=window))
+        self._decode = jax.jit(
+            lambda p, c, t: T.decode_step(cfg, p, c, t, window=window))
+
+    # ---- slot management -----------------------------------------------------
+    def admit(self, req: Request) -> bool:
+        """Prefill the request into a free slot; False if the batch is full."""
+        for i, slot in enumerate(self.slots):
+            if slot.free:
+                logits, cache1 = self._prefill_1(
+                    self.params, jnp.asarray(req.tokens[None]))
+                first = int(jnp.argmax(logits[0]))
+                self._write_slot_cache(i, cache1)
+                self.tokens = self.tokens.at[i].set(first)
+                self.slots[i] = SlotState(rid=req.rid,
+                                          remaining=req.max_new - 1,
+                                          generated=[first])
+                return True
+        return False
+
+    def _write_slot_cache(self, i: int, cache1) -> None:
+        """Copy a batch-1 prefill cache into slot i of the engine cache.
+
+        Positions are per-sequence ((B,)/(B,W)), so slots at different
+        prefix lengths coexist — true mid-flight continuous batching."""
+        def upd(dst, src):
+            return dst.at[:, i:i + 1].set(src)
+        self.cache["layers"] = jax.tree.map(upd, self.cache["layers"],
+                                            cache1["layers"])
+        self.cache["pos"] = self.cache["pos"].at[i].set(cache1["pos"][0])
+        # pad the batch-1 kpos up to the engine cache length
+        kp = cache1["kpos"][0]
+        if kp.shape[0] < self.cache_len:
+            kp = jnp.concatenate(
+                [kp, jnp.full((self.cache_len - kp.shape[0],), -1, jnp.int32)])
+        self.cache["kpos"] = self.cache["kpos"].at[i].set(kp)
+
+    def _release_slot(self, i: int) -> None:
+        """Reset a freed slot's bookkeeping so its lane stays benign."""
+        self.cache["pos"] = self.cache["pos"].at[i].set(0)
+        self.cache["kpos"] = self.cache["kpos"].at[i].set(-1)
+
+    def step(self) -> List[Tuple[int, List[int]]]:
+        """One decode tick for every active slot.  Returns finished
+        (rid, generated_tokens) pairs."""
+        self.ticks += 1
+        logits, self.cache = self._decode(self.params, self.cache, self.tokens)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.tokens = nxt
+        done = []
+        for i, slot in enumerate(self.slots):
+            if slot.free:
+                continue
+            slot.generated.append(int(nxt[i]))
+            slot.remaining -= 1
+            if slot.remaining <= 0:
+                done.append((slot.rid, list(slot.generated)))
+                self.slots[i] = SlotState()
+                self._release_slot(i)
+        return done
+
+    @property
+    def active(self) -> int:
+        return sum(not s.free for s in self.slots)
+
+
+class CascadeServer:
+    """Edge triage + cloud continuous-batching decode."""
+
+    def __init__(self, edge_cfg: ModelConfig, edge_params,
+                 cloud_cfg: ModelConfig, cloud_params, *,
+                 slots: int = 4, cache_len: int = 128,
+                 thresholds: Optional[ThresholdState] = None):
+        self.edge_cfg = edge_cfg
+        self.edge_params = edge_params
+        self.th = thresholds or ThresholdState(alpha=0.8, beta=0.1)
+        self.engine = DecodeEngine(cloud_cfg, cloud_params, slots=slots,
+                                   cache_len=cache_len)
+        self.queue: List[Request] = []
+        self.results: Dict[int, Request] = {}
+
+        @jax.jit
+        def edge_conf(params, tokens):
+            h, _ = T.forward(edge_cfg, params, tokens, remat=False)
+            return C.confidence_from_logits(T.classify(edge_cfg, params, h))
+
+        self._edge_conf = edge_conf
+
+    def submit(self, req: Request) -> None:
+        conf = float(self._edge_conf(self.edge_params,
+                                     jnp.asarray(req.tokens[None]))[0])
+        route = self.th.triage(conf)
+        if route == "accept":
+            req.route, req.output = "edge_accept", np.asarray([1])
+            self.results[req.rid] = req
+        elif route == "reject":
+            req.route, req.output = "edge_reject", np.asarray([0])
+            self.results[req.rid] = req
+        else:
+            req.route = "cloud"
+            self.queue.append(req)
+
+    def run(self, requests: List[Request], max_ticks: int = 1000
+            ) -> Dict[int, Request]:
+        pending: Dict[int, Request] = {}
+        for r in requests:
+            self.submit(r)
+            if r.route == "cloud":
+                pending[r.rid] = r
+        # Mid-flight continuous batching: positions are per-sequence, so any
+        # freed slot is refilled immediately, regardless of how far the other
+        # slots have decoded or how long the new prompt is.
+        ticks = 0
+        while (self.queue or self.engine.active) and ticks < max_ticks:
+            while self.queue and self.engine.admit(self.queue[0]):
+                self.queue.pop(0)
+            for req in self.queue:
+                req.ticks_waited += 1
+            if self.engine.active:
+                for rid, generated in self.engine.step():
+                    req = pending.pop(rid)
+                    req.output = np.asarray(generated, np.int32)
+                    self.results[rid] = req
+            ticks += 1
+        return self.results

@@ -1,0 +1,138 @@
+"""Step factories: train_step / prefill_step / decode_step closures.
+
+These are the functions the launcher jits with explicit in/out shardings; the
+dry-run lowers exactly the same closures with ShapeDtypeStructs.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.AdamWState
+    step: jax.Array
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean next-token xent; logits (B,S,V) f32-cast, labels (B,S) int32."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - ll)
+
+
+def make_loss_fn(cfg: ModelConfig, *, remat: bool = True,
+                 remat_policy=None, ctx=None):
+    def loss_fn(params, batch: Dict[str, jax.Array]):
+        h, aux = T.forward(
+            cfg, params, batch["tokens"],
+            img_embeds=batch.get("img_embeds"),
+            audio_frames=batch.get("audio_frames"),
+            remat=remat, remat_policy=remat_policy, ctx=ctx)
+        if cfg.num_img_tokens > 0:          # loss only over text positions
+            h = h[:, cfg.num_img_tokens:]
+        logits = T.lm_logits(cfg, params, h, ctx=ctx)
+        loss = cross_entropy(logits, batch["labels"])
+        if cfg.is_moe:
+            loss = loss + cfg.router_aux_coef * aux
+        return loss, {"lm_loss": loss, "moe_aux": aux}
+    return loss_fn
+
+
+def default_microbatches(cfg: ModelConfig, global_batch: int,
+                         data_shards: int) -> int:
+    """Gradient-accumulation factor so per-micro activations fit HBM."""
+    per_shard = max(global_batch // max(data_shards, 1), 1)
+    want = 8 if cfg.param_count() > 2e9 else 4
+    m = 1
+    while m < want and per_shard % (m * 2) == 0:
+        m *= 2
+    return m
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig, *,
+                    remat: bool = True, microbatches: int = 1,
+                    remat_policy=None, ctx=None) -> Callable:
+    """train_step with optional gradient accumulation.
+
+    ``microbatches > 1`` splits the global batch into M sequential
+    microbatches (lax.scan), accumulating f32 grads — the standard way a
+    256x4096-token global batch fits per-chip HBM on the production mesh.
+    """
+    loss_fn = make_loss_fn(cfg, remat=remat, remat_policy=remat_policy,
+                           ctx=ctx)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        if microbatches == 1:
+            (loss, metrics), grads = grads_of(state.params, batch)
+        else:
+            def split(leaf):
+                b = leaf.shape[0]
+                assert b % microbatches == 0, (b, microbatches)
+                return leaf.reshape(microbatches, b // microbatches,
+                                    *leaf.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+
+            def acc(carry, mb):
+                g_acc, loss_acc, aux_acc = carry
+                (loss, metrics), g = grads_of(state.params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, loss_acc + loss,
+                        aux_acc + metrics["moe_aux"]), None
+
+            (g_sum, loss_sum, aux_sum), _ = jax.lax.scan(
+                acc, (zero_g, jnp.zeros((), jnp.float32),
+                      jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / microbatches, g_sum)
+            loss = loss_sum / microbatches
+            metrics = {"lm_loss": loss, "moe_aux": aux_sum / microbatches}
+        new_params, new_opt, opt_metrics = adamw.apply(
+            opt_cfg, grads, state.opt, state.params)
+        metrics = dict(metrics, **opt_metrics, loss=loss)
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, cache_len: Optional[int] = None,
+                      window: Optional[int] = None, ctx=None) -> Callable:
+    def prefill_step(params, batch: Dict[str, jax.Array]):
+        return T.prefill(cfg, params, batch["tokens"],
+                         cache_len=cache_len,
+                         audio_frames=batch.get("audio_frames"),
+                         img_embeds=batch.get("img_embeds"),
+                         window=window, ctx=ctx)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, *, window: Optional[int] = None,
+                     ctx=None) -> Callable:
+    def decode_step(params, cache, token):
+        return T.decode_step(cfg, params, cache, token, window=window, ctx=ctx)
+    return decode_step
+
+
+def make_classify_fn(cfg: ModelConfig, ctx=None) -> Callable:
+    """CQ-specific classifier forward (cascade edge/cloud models)."""
+    def classify(params, batch: Dict[str, jax.Array]):
+        h, _ = T.forward(cfg, params, batch["tokens"],
+                         img_embeds=batch.get("img_embeds"),
+                         audio_frames=batch.get("audio_frames"),
+                         remat=False, ctx=ctx)
+        return T.classify(cfg, params, h)
+    return classify

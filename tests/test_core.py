@@ -1,0 +1,156 @@
+"""SurveilEdge core: scheduler (Eq.7), thresholds (Eq.8-9), latency (Eq.10-17),
+clustering, cascade."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cascade as C
+from repro.core import clustering as CL
+from repro.core import latency as LT
+from repro.core.scheduler import CLOUD, Scheduler
+from repro.core.thresholds import ThresholdState
+
+
+# --- Eq. 7 ---------------------------------------------------------------------
+
+def test_scheduler_argmin_qt():
+    s = Scheduler([0, 1, 2])
+    s.nodes[0].queue_len, s.nodes[0].estimator.t = 10, 1.0   # cost 10
+    s.nodes[1].queue_len, s.nodes[1].estimator.t = 3, 2.0    # cost 6
+    s.nodes[2].queue_len, s.nodes[2].estimator.t = 8, 0.5    # cost 4 <- min
+    assert s.select_node() == 2
+    assert s.select_node(exclude_cloud=True) == 2
+    s.nodes[2].queue_len = 100
+    assert s.select_node() == 1
+
+
+def test_scheduler_updates_move_queue_and_latency():
+    s = Scheduler([0, 1])
+    s.on_enqueue(1)
+    assert s.nodes[1].queue_len == 1
+    t_before = s.nodes[1].estimator.t
+    s.on_complete(1, 0.5)
+    assert s.nodes[1].queue_len == 0
+    assert s.nodes[1].estimator.t != t_before
+
+
+# --- Eqs. 8-9 -------------------------------------------------------------------
+
+def test_threshold_bounds_always_hold():
+    th = ThresholdState()
+    rng = np.random.default_rng(0)
+    for _ in range(500):
+        th = th.update(rng.integers(0, 50), rng.uniform(0, 3), 1.0)
+        assert 0.5 <= th.alpha <= 1.0
+        assert 0.0 <= th.beta < 0.5
+        assert th.beta < th.alpha
+
+
+def test_threshold_shrinks_under_load_and_widens_when_idle():
+    # Eq. 8: drain > s -> alpha decreases (more edge-accepts, fewer uploads);
+    # drain < s -> alpha increases (more reclassification on the cloud).
+    th = ThresholdState(alpha=0.8)
+    overloaded = th.update(queue_len=50, item_latency=1.0, interval_s=1.0)
+    assert overloaded.alpha < th.alpha
+    idle = th.update(queue_len=0, item_latency=0.01, interval_s=1.0)
+    assert idle.alpha >= th.alpha  # widens the escalation bracket
+
+
+def test_triage_regions():
+    th = ThresholdState(alpha=0.8, beta=0.1)
+    assert th.triage(0.95) == "accept"
+    assert th.triage(0.05) == "reject"
+    assert th.triage(0.5) == "escalate"
+
+
+# --- Eq. 17 ---------------------------------------------------------------------
+
+def test_adaptive_mean_damps_outliers():
+    t = 0.1
+    t_spike = LT.adaptive_mean(t, 10.0)          # huge outlier
+    t_plain = (0.1 + 10.0) / 2
+    assert t_spike < t_plain                     # damped vs plain mean
+    assert t < t_spike                           # still moves toward it
+
+
+def test_adaptive_mean_is_convex_combination():
+    rng = np.random.default_rng(1)
+    for _ in range(200):
+        a, b = rng.uniform(0.01, 5, 2)
+        m = LT.adaptive_mean(a, b)
+        assert min(a, b) - 1e-9 <= m <= max(a, b) + 1e-9
+
+
+def test_adaptive_mean_fixed_point():
+    assert LT.adaptive_mean(0.7, 0.7) == pytest.approx(0.7)
+
+
+# --- Eqs. 10-16 ------------------------------------------------------------------
+
+def test_lognormal3_mle_recovers_parameters():
+    rng = np.random.default_rng(2)
+    gamma, mu, sigma = 0.05, -2.0, 0.5
+    x = gamma + np.exp(rng.normal(mu, sigma, 4000))
+    g, m, s2 = LT.fit_lognormal3(x)
+    assert abs(g - gamma) < 0.02
+    assert abs(m - mu) < 0.15
+    assert abs(math.sqrt(s2) - sigma) < 0.1
+
+
+def test_latency_estimator_predict_positive_and_bounded():
+    est = LT.LatencyEstimator(t=0.1, refit_every=32)
+    rng = np.random.default_rng(3)
+    for _ in range(200):
+        est.observe(float(0.02 + np.exp(rng.normal(-2.5, 0.4))))
+    p = est.predict()
+    assert 0.0 < p < 1.0
+
+
+# --- clustering -------------------------------------------------------------------
+
+def test_kmeans_separates_two_scene_types():
+    rng = np.random.default_rng(4)
+    road = rng.dirichlet([8, 1, 1, 1], size=10)
+    plaza = rng.dirichlet([1, 8, 1, 1], size=10)
+    profs = jnp.asarray(np.concatenate([road, plaza]))
+    assign, centers, inertia = CL.kmeans(profs, 2)
+    a = np.asarray(assign)
+    assert len(set(a[:10])) == 1 and len(set(a[10:])) == 1
+    assert a[0] != a[10]
+    assert float(inertia) < 1.0
+
+
+def test_proportion_vector_normalized():
+    labels = jnp.asarray([0, 0, 1, 2, 2, 2], jnp.int32)
+    pv = CL.proportion_vector(labels, 4)
+    np.testing.assert_allclose(np.asarray(pv), [2 / 6, 1 / 6, 3 / 6, 0], atol=1e-6)
+
+
+# --- cascade ----------------------------------------------------------------------
+
+def test_cascade_batch_routes_and_combines():
+    conf = jnp.asarray([0.95, 0.5, 0.02, 0.6])
+    items = jnp.arange(4)
+
+    def cloud_fn(x):                      # item 1 and 3 escalate
+        return jnp.where(x % 2 == 1, 0.9, 0.1)
+
+    out = C.cascade_batch(conf, cloud_fn, items,
+                          alpha=jnp.float32(0.8), beta=jnp.float32(0.1),
+                          capacity=4)
+    assert int(out["n_escalated"]) == 2
+    dec = np.asarray(out["decision"])
+    assert dec[0]                  # edge accept
+    assert not dec[2]              # edge reject
+    assert dec[1] and dec[3]       # cloud accepted both escalations
+
+
+def test_compact_escalated_overflow_is_bounded():
+    routes = jnp.full((16,), C.ESCALATE, jnp.int32)
+    idx, valid, n = C.compact_escalated(routes, capacity=4)
+    assert int(n) == 16
+    assert int(valid.sum()) == 4
+    np.testing.assert_array_equal(np.asarray(idx), [0, 1, 2, 3])

@@ -1,0 +1,85 @@
+"""prefill(S-1) + decode(1) must equal forward(S) at the last position."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ASSIGNED, get_config
+from repro.models import meta, transformer as T
+
+TOL = {"default": 2e-4}
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_decode_matches_forward(arch):
+    cfg = get_config(arch).reduced()
+    if cfg.is_moe:
+        # capacity-based token dropping differs between batch compositions;
+        # remove drops so the comparison is exact
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.num_experts))
+    key = jax.random.PRNGKey(3)
+    params = meta.init_params(cfg, key)
+    B, S = 2, 24
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    kw = {}
+    if cfg.num_img_tokens:
+        kw["img_embeds"] = jax.random.normal(key, (B, cfg.num_img_tokens, 1024)) * 0.1
+    if cfg.is_encdec:
+        kw["audio_frames"] = jax.random.normal(key, (B, cfg.enc_seq, cfg.d_model)) * 0.1
+    h, _ = T.forward(cfg, params, tokens, **kw)
+    want = T.lm_logits(cfg, params, h)[:, -1]
+    _, cache = T.prefill(cfg, params, tokens[:, :-1], cache_len=S + 4, **kw)
+    got, _ = T.decode_step(cfg, params, cache, tokens[:, -1])
+    err = float(jnp.max(jnp.abs(want - got)))
+    assert err < 2e-4, err
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "mamba2-2.7b", "hymba-1.5b"])
+def test_multi_step_decode_chain(arch):
+    """Decoding T tokens one-by-one equals the full forward logits."""
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(4)
+    params = meta.init_params(cfg, key)
+    B, S = 2, 16
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    h, _ = T.forward(cfg, params, tokens)
+    want = T.lm_logits(cfg, params, h)
+    _, cache = T.prefill(cfg, params, tokens[:, :4], cache_len=S)
+    for i in range(4, S):
+        got, cache = T.decode_step(cfg, params, cache, tokens[:, i])
+        err = float(jnp.max(jnp.abs(want[:, i] - got)))
+        assert err < 5e-4, (i, err)
+
+
+def test_sliding_window_decode_consistency():
+    """With window w, decode must match a forward pass with the same mask."""
+    cfg = get_config("qwen3-8b").reduced()
+    key = jax.random.PRNGKey(5)
+    params = meta.init_params(cfg, key)
+    B, S, W = 1, 24, 8
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    h, _ = T.forward(cfg, params, tokens, window=W)
+    want = T.lm_logits(cfg, params, h)[:, -1]
+    _, cache = T.prefill(cfg, params, tokens[:, :-1], cache_len=S, window=W)
+    got, _ = T.decode_step(cfg, params, cache, tokens[:, -1], window=W)
+    err = float(jnp.max(jnp.abs(want - got)))
+    assert err < 2e-4, err
+
+
+def test_rotating_window_cache():
+    """Cache shorter than the sequence: ring-buffer decode still matches the
+    windowed forward."""
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    key = jax.random.PRNGKey(6)
+    params = meta.init_params(cfg, key)
+    B, S, W = 1, 20, 8
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    h, _ = T.forward(cfg, params, tokens, window=W)
+    want = T.lm_logits(cfg, params, h)
+    # prefill only the first W tokens, then ring-decode the rest
+    _, cache = T.prefill(cfg, params, tokens[:, :W], cache_len=W, window=W)
+    for i in range(W, S):
+        got, cache = T.decode_step(cfg, params, cache, tokens[:, i], window=W)
+        err = float(jnp.max(jnp.abs(want[:, i] - got)))
+        assert err < 5e-4, (i, err)

@@ -1,0 +1,40 @@
+"""Dry-run launcher CLI smoke (subprocess: needs its own XLA device count)."""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(args, timeout=300):
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *args],
+        capture_output=True, text=True, timeout=timeout, env=env, cwd=ROOT)
+
+
+@pytest.mark.parametrize("mesh", ["single", "multi"])
+def test_dryrun_cli_compiles_and_records(mesh):
+    with tempfile.TemporaryDirectory() as d:
+        r = _run(["--arch", "qwen1.5-0.5b", "--shape", "long_500k",
+                  "--mesh", mesh, "--out", d])
+        assert r.returncode == 0, r.stderr[-2000:]
+        assert "All dry-runs compiled successfully" in r.stdout
+        recs = os.listdir(d)
+        assert len(recs) == 1
+        rec = json.load(open(os.path.join(d, recs[0])))
+        assert rec["chips"] == (512 if mesh == "multi" else 256)
+        assert rec["memory"]["peak_bytes"] > 0
+        assert "flops" in rec["cost"]
+        assert rec["window"] == 8192      # long-context sliding window
+
+
+def test_dryrun_cli_perf_knobs():
+    r = _run(["--arch", "qwen1.5-0.5b", "--shape", "decode_32k",
+              "--mesh", "single", "--kv-dtype", "int8", "--serve-1d"])
+    assert r.returncode == 0, r.stderr[-2000:]

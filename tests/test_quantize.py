@@ -1,0 +1,77 @@
+"""int8 weight + KV-cache quantization: roundtrip and accuracy bounds."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, get_config
+from repro.distributed import quantize as QZ
+from repro.models import layers as L, meta, transformer as T
+
+
+def test_quantize_roundtrip_error_bound():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 64, 32)) * 3.0
+    q = QZ.quantize_leaf(x, stacked=True)
+    back = QZ.dequantize_leaf(q, jnp.float32)
+    # symmetric int8: error <= scale/2 per element
+    err = jnp.abs(back - x)
+    bound = q["s"].reshape(4, 1, 32) / 2 + 1e-6
+    assert bool(jnp.all(err <= bound))
+    assert q["q"].dtype == jnp.int8
+    assert q["s"].shape == (4, 32)      # stacked: per (layer, out-channel)
+
+
+def test_quantize_tree_skips_norms_and_keeps_scan_axis():
+    cfg = get_config("qwen3-8b").reduced()
+    params = meta.init_params(cfg, jax.random.PRNGKey(0))
+    qp = QZ.quantize_tree(params, cfg)
+    # norms stay fp
+    assert not isinstance(qp["layers"]["norm1"]["scale"], dict)
+    # weights are quantized with leading layer dim intact
+    wq = qp["layers"]["attn"]["wq"]
+    assert wq["q"].dtype == jnp.int8
+    assert wq["q"].shape[0] == cfg.num_layers
+    assert wq["s"].shape[0] == cfg.num_layers
+    # dequant restores structure
+    back = QZ.dequant_tree(qp, jnp.float32)
+    assert back["layers"]["attn"]["wq"].shape == params["layers"]["attn"]["wq"].shape
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "granite-moe-1b-a400m",
+                                  "hymba-1.5b"])
+def test_int8_weights_forward_close(arch):
+    cfg = get_config(arch).reduced()
+    params = meta.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.bfloat16)
+    qp = QZ.quantize_tree(params, cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0,
+                                cfg.vocab_size)
+    h, _ = T.forward(cfg, params, tokens)
+    want = T.lm_logits(cfg, params, h).astype(jnp.float32)
+    hq, _ = T.forward(cfg, qp, tokens)
+    got = T.lm_logits(cfg, qp, hq).astype(jnp.float32)
+    rel = float(jnp.max(jnp.abs(want - got)) / jnp.max(jnp.abs(want)))
+    assert rel < 0.06, rel
+
+
+def test_int8_kv_cache_decode_close():
+    cfg = dataclasses.replace(get_config("qwen3-8b").reduced(),
+                              kv_cache_dtype="int8")
+    params = meta.init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0,
+                                cfg.vocab_size)
+    h, _ = T.forward(cfg, params, tokens)
+    want = T.lm_logits(cfg, params, h)[:, -1]
+    _, cache = T.prefill(cfg, params, tokens[:, :-1], cache_len=28)
+    assert cache["layers"]["k"].dtype == jnp.int8
+    got, _ = T.decode_step(cfg, params, cache, tokens[:, -1])
+    rel = float(jnp.max(jnp.abs(want - got)) / jnp.max(jnp.abs(want)))
+    assert rel < 0.02, rel
+
+
+def test_quantize_kv_roundtrip():
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 8, 4, 16))
+    q, s = L.quantize_kv(x)
+    back = L.dequantize_kv(q, s, jnp.float32)
+    assert float(jnp.max(jnp.abs(back - x))) <= float(jnp.max(s)) / 2 + 1e-5

@@ -1,0 +1,66 @@
+"""Roofline analytics sanity + input_specs shapes for all (arch x shape)."""
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ASSIGNED, get_config
+from repro.configs.shapes import (INPUT_SHAPES, attn_cache_len, decode_window,
+                                  input_specs)
+from repro.launch import roofline as R
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+@pytest.mark.parametrize("shape", list(INPUT_SHAPES))
+def test_roofline_terms_positive_and_sane(arch, shape):
+    cfg = get_config(arch)
+    rl = R.analyze(cfg, INPUT_SHAPES[shape])
+    assert rl.compute_s > 0 and rl.memory_s > 0 and rl.collective_s >= 0
+    assert rl.dominant in ("compute", "memory", "collective")
+    # the 6ND convention should be within ~3x of the exact matmul count
+    assert 0.1 < rl.useful_ratio < 3.0, rl.useful_ratio
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_analytic_flops_ordering(arch):
+    cfg = get_config(arch)
+    f_train = R.analytic_flops(cfg, INPUT_SHAPES["train_4k"])
+    f_prefill = R.analytic_flops(cfg, INPUT_SHAPES["prefill_32k"])
+    f_decode = R.analytic_flops(cfg, INPUT_SHAPES["decode_32k"])
+    assert f_train > f_decode
+    assert f_prefill > f_decode
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+@pytest.mark.parametrize("shape", list(INPUT_SHAPES))
+def test_input_specs_shapes(arch, shape):
+    cfg = get_config(arch)
+    sh = INPUT_SHAPES[shape]
+    specs = input_specs(cfg, sh)
+    B = sh.global_batch
+    if sh.kind == "decode":
+        assert specs["token"].shape == (B,)
+    else:
+        s_text = sh.seq_len - (cfg.num_img_tokens or 0)
+        assert specs["tokens"].shape == (B, s_text)
+        if cfg.is_encdec:
+            assert specs["audio_frames"].shape == (B, cfg.enc_seq, cfg.d_model)
+        if cfg.num_img_tokens:
+            assert specs["img_embeds"].shape == (B, cfg.num_img_tokens, 1024)
+    if sh.kind == "train":
+        assert specs["labels"].shape == specs["tokens"].shape
+
+
+def test_long_context_uses_window_for_attention_archs():
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        w = decode_window(cfg, INPUT_SHAPES["long_500k"])
+        if cfg.has_attn:
+            assert w == 8192
+            assert attn_cache_len(cfg, INPUT_SHAPES["long_500k"]) == 8192
+        else:
+            assert w is None     # ssm needs no window
+
+
+def test_decode_32k_is_full_attention():
+    cfg = get_config("qwen3-8b")
+    assert decode_window(cfg, INPUT_SHAPES["decode_32k"]) is None
+    assert attn_cache_len(cfg, INPUT_SHAPES["decode_32k"]) == 32768

@@ -1,0 +1,80 @@
+"""Bus/ParamDB, workload construction, fine-tune improvement, simulator
+conservation invariants."""
+import numpy as np
+import pytest
+
+from repro.serving.bus import Bus, ParamDB
+from repro.serving.simulator import CloudEdgeSim, Item, LinkSpec, NodeSpec
+
+
+def test_bus_topic_matching_and_wildcards():
+    bus = Bus()
+    got = []
+    bus.subscribe("params/#", lambda t, p: got.append((t, p)))
+    bus.subscribe("tasks/edge1", lambda t, p: got.append((t, p)))
+    bus.publish("params/alpha", 0.8)
+    bus.publish("tasks/edge1", "img")
+    bus.publish("tasks/edge2", "img")        # no subscriber
+    assert got == [("params/alpha", 0.8), ("tasks/edge1", "img")]
+    assert bus.delivered == 2
+
+
+def test_paramdb_replicates_on_write():
+    bus = Bus()
+    db = ParamDB(bus)
+    seen = {}
+    bus.subscribe("params/#", lambda t, p: seen.update({t: p}))
+    db.put("t1", 0.25)
+    db.put("Q1", 3)
+    assert db.get("t1") == 0.25
+    assert seen == {"params/t1": 0.25, "params/Q1": 3}
+    assert db.writes == 2
+
+
+def _items(n=50, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Item(t_arrival=float(t), camera=int(t) % 4,
+                 edge_device=int(t) % 2 + 1,
+                 conf=float(rng.uniform()), is_query=bool(rng.random() < 0.2))
+            for t in np.sort(rng.uniform(0, 30, n))]
+
+
+@pytest.mark.parametrize("scheme", ["surveiledge", "surveiledge_fixed",
+                                    "edge_only", "cloud_only"])
+def test_simulator_conservation(scheme):
+    items = _items()
+    sim = CloudEdgeSim([NodeSpec(1, 0.2), NodeSpec(2, 0.2)], NodeSpec(0, 0.05),
+                       LinkSpec(uplink_MBps=1.0), scheme=scheme, seed=0)
+    r = sim.run(items)
+    assert len(r.latencies) == len(items)            # every item answered once
+    assert np.all(r.latencies > 0)
+    if scheme == "edge_only":
+        assert r.uploaded_bytes == 0
+    if scheme == "cloud_only":
+        assert r.uploaded_bytes == sum(i.nbytes for i in items)
+        assert np.array_equal(r.decisions, r.truths)  # cloud == ground truth
+
+
+def test_simulator_latency_grows_with_load():
+    fast = [Item(i.t_arrival, i.camera, 1, i.conf, i.is_query)
+            for i in _items(30, seed=1)]
+    slow_edges = [NodeSpec(1, 2.0)]
+    sim = CloudEdgeSim(slow_edges, NodeSpec(0, 0.05), LinkSpec(), scheme="edge_only", seed=0)
+    r_slow = sim.run(fast)
+    sim2 = CloudEdgeSim([NodeSpec(1, 0.05)], NodeSpec(0, 0.05), LinkSpec(),
+                        scheme="edge_only", seed=0)
+    r_fast = sim2.run(fast)
+    assert r_slow.avg_latency > r_fast.avg_latency
+
+
+def test_wan_uplink_serializes():
+    """Uploads must queue on the shared link: cloud-only latency grows with
+    item size under a thin uplink."""
+    items = _items(40, seed=2)
+    def run(nbytes):
+        its = [Item(i.t_arrival, i.camera, i.edge_device, i.conf,
+                    i.is_query, nbytes=nbytes) for i in items]
+        sim = CloudEdgeSim([NodeSpec(1, 0.1)], NodeSpec(0, 0.05),
+                           LinkSpec(uplink_MBps=0.2), scheme="cloud_only", seed=0)
+        return sim.run(its).avg_latency
+    assert run(400_000) > run(4_000) * 2

@@ -1,0 +1,73 @@
+"""Sharding rules: divisibility invariants across all archs x modes."""
+import numpy as np
+import jax
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import ASSIGNED, get_config
+from repro.distributed import sharding as SH
+from repro.models import meta as M
+
+
+def _fake_mesh(shape=(16, 16), axes=("data", "model")):
+    """An abstract mesh for spec computation (no 512 devices needed)."""
+    devs = np.asarray(jax.devices() * int(np.prod(shape)))[
+        : int(np.prod(shape))].reshape(shape)
+    return Mesh(devs, axes)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+@pytest.mark.parametrize("mode", ["train", "serve"])
+def test_param_specs_divisible(arch, mode):
+    cfg = get_config(arch)
+    mesh = _fake_mesh()
+    specs = SH.param_specs(cfg, mesh, mode)
+    metas = M.model_meta(cfg)
+
+    def check(pm, spec):
+        assert len(spec) <= len(pm.shape)
+        used = [a for a in spec if a is not None]
+        assert len(used) == len(set(used)), f"axis reused: {spec}"
+        for dim, ax in zip(pm.shape, tuple(spec) + (None,) * (len(pm.shape) - len(spec))):
+            if ax is None:
+                continue
+            n = mesh.shape[ax] if isinstance(ax, str) else int(
+                np.prod([mesh.shape[a] for a in ax]))
+            assert dim % n == 0, (arch, pm.shape, spec)
+
+    jax.tree.map(check, metas, specs,
+                 is_leaf=lambda x: isinstance(x, (M.ParamMeta, P)))
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "granite-moe-1b-a400m", "mamba2-2.7b"])
+def test_train_mode_fsdp_shards_embed_dim(arch):
+    cfg = get_config(arch)
+    mesh = _fake_mesh()
+    spec = SH.spec_for_meta(cfg, M.model_meta(cfg)["embed"], mesh, "train")
+    assert "data" in spec  # (V, D): D sharded on data in train
+
+
+def test_batch_spec_divisibility_fallback():
+    mesh = _fake_mesh()
+    assert SH._batch_spec(mesh, 256) == "data"
+    assert SH._batch_spec(mesh, 1) is None
+    mesh3 = _fake_mesh((2, 16, 16), ("pod", "data", "model"))
+    assert SH._batch_spec(mesh3, 256) == ("pod", "data")
+    assert SH._batch_spec(mesh3, 2) == "pod"
+
+
+def test_moe_experts_on_model_axis():
+    cfg = get_config("granite-moe-1b-a400m")
+    mesh = _fake_mesh()
+    specs = SH.param_specs(cfg, mesh, "train")
+    wi_spec = specs["layers"]["moe"]["wi"]
+    assert wi_spec[1] == "model"        # (L, E, D, F): experts on model
+    assert wi_spec[3] is None           # per-expert mlp unsharded for MoE
+
+
+def test_nondivisible_heads_replicate():
+    cfg = get_config("hymba-1.5b")      # 25 heads % 16 != 0
+    mesh = _fake_mesh()
+    specs = SH.param_specs(cfg, mesh, "serve")
+    wq = specs["layers"]["attn"]["wq"]
+    assert "model" not in tuple(wq)     # replicated rather than broken

@@ -1,0 +1,55 @@
+"""Cascade speculative decoding: output-identical to cloud greedy."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import speculative as SP
+from repro.models import meta
+
+
+@pytest.fixture(scope="module")
+def pair():
+    cloud_cfg = get_config("qwen1.5-0.5b").reduced()
+    edge_cfg = get_config("qwen1.5-0.5b").edge_variant()
+    cloud = meta.init_params(cloud_cfg, jax.random.PRNGKey(0))
+    edge = meta.init_params(edge_cfg, jax.random.PRNGKey(1))
+    return edge_cfg, edge, cloud_cfg, cloud
+
+
+def test_speculative_equals_cloud_greedy(pair):
+    edge_cfg, edge, cloud_cfg, cloud = pair
+    prompt = jax.random.randint(jax.random.PRNGKey(2), (1, 12), 0,
+                                cloud_cfg.vocab_size)
+    want = SP.cloud_greedy_generate(cloud_cfg, cloud, prompt, steps=10)
+    got, stats = SP.speculative_generate(edge_cfg, edge, cloud_cfg, cloud,
+                                         prompt, steps=10, k=3)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert stats.proposed >= stats.accepted >= 0
+    assert stats.cloud_steps >= 1
+
+
+def test_speculative_self_draft_accepts_everything(pair):
+    """Drafting with the cloud model itself must accept every proposal."""
+    _, _, cloud_cfg, cloud = pair
+    prompt = jax.random.randint(jax.random.PRNGKey(3), (1, 8), 0,
+                                cloud_cfg.vocab_size)
+    got, stats = SP.speculative_generate(cloud_cfg, cloud, cloud_cfg, cloud,
+                                         prompt, steps=8, k=4)
+    want = SP.cloud_greedy_generate(cloud_cfg, cloud, prompt, steps=8)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert stats.acceptance_rate == pytest.approx(1.0)
+    assert stats.tokens_per_cloud_step > 1.5
+
+
+def test_verify_prefix_logic():
+    V = 16
+    draft = jnp.asarray([[3, 5, 7]])
+    logits = jnp.zeros((1, 3, V))
+    logits = logits.at[0, 0, 3].set(9.0)     # agrees
+    logits = logits.at[0, 1, 5].set(9.0)     # agrees
+    logits = logits.at[0, 2, 9].set(9.0)     # disagrees -> cloud says 9
+    n, nxt = SP.verify_prefix(logits, draft)
+    assert int(n[0]) == 2
+    assert int(nxt[0]) == 9

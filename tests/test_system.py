@@ -1,0 +1,78 @@
+"""End-to-end behaviour tests: the four query schemes reproduce the paper's
+qualitative orderings (Table II structure) on a synthetic workload."""
+import numpy as np
+import pytest
+
+from repro.serving.simulator import CloudEdgeSim, LinkSpec, NodeSpec
+from repro.serving.workload import build_workload
+
+
+@pytest.fixture(scope="module")
+def workload():
+    return build_workload(num_cameras=6, num_edges=3, duration_s=90.0,
+                          finetune_steps=40, seed=0)
+
+
+def _run(wl, scheme, edge_s=0.30, cloud_s=0.05, up=0.5):
+    edges = [NodeSpec(i, service_s=edge_s) for i in (1, 2, 3)]
+    cloud = NodeSpec(0, service_s=cloud_s)
+    sim = CloudEdgeSim(edges, cloud, LinkSpec(uplink_MBps=up, rtt_s=0.1),
+                       scheme=scheme, seed=1)
+    return sim.run(wl.items)
+
+
+def test_edge_model_actually_learned(workload):
+    assert workload.edge_accuracy > 0.75
+
+
+def test_every_item_answered_exactly_once(workload):
+    for scheme in ("surveiledge", "surveiledge_fixed", "edge_only", "cloud_only"):
+        r = _run(workload, scheme)
+        assert len(r.latencies) == len(workload.items)
+        assert len(r.decisions) == len(workload.items)
+
+
+def test_scheme_orderings_match_paper(workload):
+    se = _run(workload, "surveiledge")
+    fx = _run(workload, "surveiledge_fixed")
+    eo = _run(workload, "edge_only")
+    co = _run(workload, "cloud_only")
+    # accuracy: cloud-only (ground truth) >= surveiledge > edge-only
+    assert co.f_score() == pytest.approx(1.0)
+    assert se.f_score() > eo.f_score()
+    assert se.f_score() > fx.f_score() - 0.02
+    # latency: surveiledge beats cloud-only, edge-only and fixed (overload)
+    assert se.avg_latency < co.avg_latency
+    assert se.avg_latency < eo.avg_latency
+    assert se.avg_latency < fx.avg_latency
+    # bandwidth: edge-only ships nothing; surveiledge ships less than cloud-only
+    assert eo.uploaded_bytes == 0
+    assert 0 < se.uploaded_bytes <= co.uploaded_bytes
+    # latency variance: the allocator reduces variance vs fixed
+    assert se.latency_var < fx.latency_var
+
+
+def test_adaptive_thresholds_react(workload):
+    sim_edges = [NodeSpec(i, service_s=0.30) for i in (1, 2, 3)]
+    sim = CloudEdgeSim(sim_edges, NodeSpec(0, service_s=0.05),
+                       LinkSpec(uplink_MBps=0.5), scheme="surveiledge", seed=2)
+    sim.run(workload.items)
+    th = sim.sched.thresholds
+    assert 0.5 <= th.alpha <= 1.0 and th.beta < 0.5
+    # parameter DB saw replicated updates
+    assert sim.db.writes > len(workload.items)
+
+
+def test_heterogeneous_edges_offload(workload):
+    """A slow edge under SurveilEdge should not dominate tail latency the
+    way it does in edge-only (Table IV structure)."""
+    def run(scheme):
+        edges = [NodeSpec(1, service_s=0.9), NodeSpec(2, service_s=0.3),
+                 NodeSpec(3, service_s=0.15)]
+        sim = CloudEdgeSim(edges, NodeSpec(0, service_s=0.05),
+                           LinkSpec(uplink_MBps=0.5), scheme=scheme, seed=3)
+        return sim.run(workload.items)
+
+    se, eo = run("surveiledge"), run("edge_only")
+    assert se.p99_latency < eo.p99_latency
+    assert se.avg_latency < eo.avg_latency
