@@ -1,0 +1,18 @@
+# Developer entry points.  The tier-1 verify command is `make test`.
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test bench-smoke bench dev-deps
+
+test:            ## tier-1 test suite (the verify gate for every PR)
+	$(PY) -m pytest -x -q
+
+bench-smoke:     ## fast end-to-end sanity: every scenario x scheme, no training
+	$(PY) examples/run_scenarios.py --cameras 4 --duration 30
+	$(PY) examples/quickstart.py
+
+bench:           ## full paper tables/figures (fine-tunes the workload; slow)
+	$(PY) -m benchmarks.run
+
+dev-deps:        ## install test/dev dependencies
+	pip install -r requirements-dev.txt

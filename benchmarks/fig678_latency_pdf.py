@@ -25,7 +25,8 @@ def run(verbose: bool = True):
     }
     out = {}
     for name, speeds in settings.items():
-        rows = common.run_schemes(wl, edge_service=speeds, seed=21)
+        rows = common.run_schemes(wl, edge_service=speeds, seed=21,
+                                  name=name.split(" ")[0])
         out[name] = {s: _pdf_stats(rows[s]["_result"].latencies)
                      for s in common.SCHEMES}
         if verbose:

@@ -1,4 +1,8 @@
-"""Paper Table II: single edge + cloud, four query schemes."""
+"""Paper Table II: single edge + cloud, four query schemes.
+
+Runs the ``repro.system`` end-to-end harness (one ``run_query`` per scheme)
+on the single-edge scenario over the shared CQ-scored workload.
+"""
 from __future__ import annotations
 
 from benchmarks import common
@@ -6,7 +10,8 @@ from benchmarks import common
 
 def run(verbose: bool = True):
     wl = common.shared_workload()
-    rows = common.run_schemes(wl, edge_service=[1.0], seed=11)
+    rows = common.run_schemes(wl, edge_service=[1.0], seed=11,
+                              name="single_edge")
     if verbose:
         common.print_table("Table II — single edge + cloud", rows)
     se, co, eo = rows["surveiledge"], rows["cloud_only"], rows["edge_only"]

@@ -1,4 +1,8 @@
-"""Paper Table III: three homogeneous edges + cloud."""
+"""Paper Table III: three homogeneous edges + cloud.
+
+Runs the ``repro.system`` end-to-end harness (one ``run_query`` per scheme)
+on the homogeneous multi-edge scenario over the shared CQ-scored workload.
+"""
 from __future__ import annotations
 
 from benchmarks import common
@@ -6,7 +10,8 @@ from benchmarks import common
 
 def run(verbose: bool = True):
     wl = common.shared_workload()
-    rows = common.run_schemes(wl, edge_service=[1.0, 1.0, 1.0], seed=12)
+    rows = common.run_schemes(wl, edge_service=[1.0, 1.0, 1.0], seed=12,
+                              name="homogeneous_multi_edge")
     if verbose:
         common.print_table("Table III — homogeneous edges + cloud", rows)
     se, co, eo, fx = (rows[s] for s in

@@ -1,4 +1,8 @@
-"""Paper Table IV: heterogeneous edges (2/4/8-core analogues) + cloud."""
+"""Paper Table IV: heterogeneous edges (2/4/8-core analogues) + cloud.
+
+Runs the ``repro.system`` end-to-end harness (one ``run_query`` per scheme)
+on the heterogeneous multi-edge scenario over the shared CQ-scored workload.
+"""
 from __future__ import annotations
 
 from benchmarks import common
@@ -7,7 +11,8 @@ from benchmarks import common
 def run(verbose: bool = True):
     wl = common.shared_workload()
     # 2, 4, 8 logical cores -> 1.0 / 0.5 / 0.25 x per-item service time
-    rows = common.run_schemes(wl, edge_service=[1.0, 0.5, 0.25], seed=13)
+    rows = common.run_schemes(wl, edge_service=[1.0, 0.5, 0.25], seed=13,
+                              name="heterogeneous_multi_edge")
     if verbose:
         common.print_table("Table IV — heterogeneous edges + cloud", rows)
     se, co, eo, fx = (rows[s] for s in

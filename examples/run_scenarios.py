@@ -1,0 +1,49 @@
+"""Run the end-to-end query pipeline over every registered scenario.
+
+Each scenario is simulated under all four query schemes with a model-free
+synthetic detection stream (fast; no training in the loop).  For the full
+CQ-model-scored workload, see ``benchmarks/table2_single_edge.py`` etc.
+
+  PYTHONPATH=src python examples/run_scenarios.py
+  PYTHONPATH=src python examples/run_scenarios.py --scenario bursty_crowds
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.system import SCENARIOS, SCHEMES, run_query, \
+    synthetic_confidence_stream  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scenario", choices=sorted(SCENARIOS), default=None,
+                    help="run just one scenario (default: all)")
+    ap.add_argument("--cameras", type=int, default=6)
+    ap.add_argument("--duration", type=float, default=60.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    names = [args.scenario] if args.scenario else sorted(SCENARIOS)
+    for name in names:
+        sc = SCENARIOS[name](num_cameras=args.cameras,
+                             duration_s=args.duration, seed=args.seed)
+        stream = synthetic_confidence_stream(sc)
+        print(f"\n== {name} — {len(stream)} detections, "
+              f"{sc.num_edges} edge(s) + cloud ==")
+        print(f"{'scheme':20s}{'F2':>8s}{'avg_lat':>9s}{'p99':>9s}"
+              f"{'WAN_MB':>8s}{'LAN_MB':>8s}{'escal':>7s}{'rerouted':>9s}"
+              f"{'launches':>9s}")
+        for scheme in SCHEMES:
+            r = run_query(sc.with_scheme(scheme), items=stream)
+            s = r.summary()
+            print(f"{scheme:20s}{s['accuracy_F2']:8.3f}"
+                  f"{s['avg_latency_s']:9.3f}{s['p99_latency_s']:9.3f}"
+                  f"{s['bandwidth_MB']:8.2f}{s['lan_MB']:8.2f}"
+                  f"{s['escalated']:7d}{s['rerouted']:9d}"
+                  f"{s['kernel_launches']:9d}")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,7 +12,7 @@ mirroring the paper's SQLite + MQTT design with an in-process bus.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Collection, Dict, List, Optional
 
 from repro.core.latency import LatencyEstimator
 from repro.core.thresholds import ThresholdState
@@ -24,6 +24,7 @@ CLOUD = 0      # node id 0 is the Cloud, as in the paper
 class NodeInfo:
     node_id: int
     queue_len: int = 0
+    up: bool = True            # False once the node is marked failed
     estimator: LatencyEstimator = dataclasses.field(
         default_factory=LatencyEstimator)
 
@@ -46,17 +47,45 @@ class Scheduler:
         self.interval_s = interval_s
 
     # --- Eq. 7 ---------------------------------------------------------------
-    def select_node(self, exclude_cloud: bool = False) -> int:
-        """argmin_j Q_j * t_j (the cloud participates unless excluded)."""
+    def select_node(self, exclude_cloud: bool = False,
+                    exclude: Collection[int] = (),
+                    extra_cost: Optional[Dict[int, float]] = None) -> int:
+        """argmin_j Q_j * t_j (+ extra_cost_j) over eligible nodes.
+
+        The cloud participates unless ``exclude_cloud``; ``exclude`` drops
+        further node ids (e.g. a detection's own edge, or a failed node —
+        nodes marked down via :meth:`mark_down` are always skipped).
+        ``extra_cost`` adds per-node seconds to the drain cost — the
+        end-to-end harness charges the cloud its WAN-uplink backlog this
+        way, since the paper folds transmission latency into t_0.  Ties
+        break to the lowest node id, so with every queue empty the cloud
+        (node 0) wins — matching the paper's idle-system behaviour where the
+        fast cloud absorbs traffic until edge queues pay off.  Raises
+        ``ValueError`` if the exclusions leave no eligible node.
+        """
         best, best_cost = None, float("inf")
-        for n in self.nodes.values():
-            if exclude_cloud and n.node_id == CLOUD:
+        for nid in sorted(self.nodes):
+            n = self.nodes[nid]
+            if exclude_cloud and nid == CLOUD:
+                continue
+            if nid in exclude or not n.up:
                 continue
             cost = n.queue_len * n.t
+            if extra_cost:
+                cost += extra_cost.get(nid, 0.0)
             if cost < best_cost:
-                best, best_cost = n.node_id, cost
-        assert best is not None
+                best, best_cost = nid, cost
+        if best is None:
+            raise ValueError("no eligible node (all excluded or down)")
         return best
+
+    # --- node liveness --------------------------------------------------------
+    def mark_down(self, node_id: int) -> None:
+        """Take a node out of Eq. 7 rotation (failed-edge scenarios)."""
+        self.nodes[node_id].up = False
+
+    def mark_up(self, node_id: int) -> None:
+        self.nodes[node_id].up = True
 
     # --- parameter-store updates (any write triggers threshold refresh) ------
     def on_enqueue(self, node_id: int) -> None:

@@ -1,0 +1,25 @@
+"""Query-accuracy scoring shared by both evaluation substrates.
+
+The paper reports F2 (recall-weighted F-measure) against the cloud model's
+output treated as ground truth.  Kept in one place so the guard behaviour
+(empty classes, zero denominators) cannot diverge between
+``repro.serving.simulator.SimResult`` and ``repro.system.QueryReport``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def f_score(decisions: np.ndarray, truths: np.ndarray,
+            lam: float = 2.0) -> float:
+    """F_lambda of boolean decisions vs boolean ground truth."""
+    decisions = np.asarray(decisions, bool)
+    truths = np.asarray(truths, bool)
+    tp = int(np.sum(decisions & truths))
+    fp = int(np.sum(decisions & ~truths))
+    fn = int(np.sum(~decisions & truths))
+    p = tp / max(tp + fp, 1)
+    r = tp / max(tp + fn, 1)
+    if p + r == 0:
+        return 0.0
+    return (1 + lam ** 2) * p * r / (lam ** 2 * p + r)

@@ -15,6 +15,7 @@ it widens -> more reclassification -> higher accuracy.  alpha is clamped to
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 
 @dataclasses.dataclass
@@ -23,12 +24,20 @@ class ThresholdState:
     beta: float = 0.1
     gamma1: float = 0.2
     gamma2: float = 0.25
+    # Optional asymmetric widening gain: when the system is idle (drain < s)
+    # alpha rises with this gain instead of gamma1.  None keeps the paper's
+    # symmetric Eq. 8.  The end-to-end harness sets a small value ("shed load
+    # fast, spend idle capacity slowly") so a periodically-idle system does
+    # not slam the bracket open and saturate the uplink with escalations.
+    gamma1_up: Optional[float] = None
 
     def update(self, queue_len: float, item_latency: float,
                interval_s: float) -> "ThresholdState":
         """Eq. 8/9 update given the selected queue's drain time."""
         drain = queue_len * item_latency
-        alpha = self.alpha - self.gamma1 * (drain - interval_s)
+        gain = self.gamma1 if (drain >= interval_s or self.gamma1_up is None) \
+            else self.gamma1_up
+        alpha = self.alpha - gain * (drain - interval_s)
         alpha = max(min(alpha, 1.0), 0.5)
         beta = self.gamma2 * (1.0 - alpha)
         return dataclasses.replace(self, alpha=alpha, beta=beta)

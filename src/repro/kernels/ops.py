@@ -107,3 +107,35 @@ def triage(conf: jax.Array, *, alpha: float, beta: float, capacity: int,
     routes, slots, count = _tr.triage_pallas(
         conf, alpha=alpha, beta=beta, capacity=capacity, interpret=INTERPRET)
     return routes, slots, count[0]
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "use_pallas"))
+def _triage_dynamic(conf: jax.Array, thresholds: jax.Array, *, capacity: int,
+                    use_pallas: bool = True):
+    if not use_pallas:
+        return _ref.triage_ref(conf, thresholds[0], thresholds[1], capacity)
+    routes, slots, count = _tr.triage_dynamic_pallas(
+        conf, thresholds, capacity=capacity, interpret=INTERPRET)
+    return routes, slots, count[0]
+
+
+def triage_batched(conf: jax.Array, *, alpha: float, beta: float,
+                   capacity: int, use_pallas: bool = True):
+    """Per-tick batched triage with *runtime* thresholds.
+
+    Pads N up to a power-of-two bucket (min 8) before the single kernel
+    launch, then slices the pad back off, so a stream of tick batches of
+    varying size hits a handful of cached compilations — and the adaptive
+    alpha/beta (which change on every Eqs. 8-9 update) are data, not trace
+    constants.  Pad lanes use conf=-1.0, which always routes to 'reject'
+    (beta >= 0) and therefore can never claim an escalation slot or count.
+    """
+    conf = jnp.asarray(conf, jnp.float32)
+    (n,) = conf.shape
+    bucket = max(8, 1 << (max(n - 1, 1)).bit_length())
+    if bucket != n:
+        conf = jnp.pad(conf, (0, bucket - n), constant_values=-1.0)
+    thresholds = jnp.asarray([alpha, beta], jnp.float32)
+    routes, slots, count = _triage_dynamic(
+        conf, thresholds, capacity=capacity, use_pallas=use_pallas)
+    return routes[:n], slots[:n], count

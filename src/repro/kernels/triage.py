@@ -45,3 +45,45 @@ def triage_pallas(conf: jax.Array, *, alpha: float, beta: float,
                    jax.ShapeDtypeStruct((1,), jnp.int32)),
         interpret=interpret,
     )(conf)
+
+
+def _triage_dyn_kernel(conf_ref, ab_ref, routes_ref, slots_ref, count_ref, *,
+                       capacity: int):
+    """Same fused pass with alpha/beta read from a (2,) runtime input.
+
+    The static-threshold kernel above bakes alpha/beta into the trace, which
+    is fine for one-off calls but forces a retrace every time Eqs. 8-9 move
+    the thresholds — i.e. every scheduler tick.  Reading them from VMEM keeps
+    the per-tick hot path at a single cached compilation.
+    """
+    conf = conf_ref[...]
+    alpha = ab_ref[0]
+    beta = ab_ref[1]
+    routes = jnp.where(conf > alpha, 0,
+                       jnp.where(conf < beta, 1, 2)).astype(jnp.int32)
+    esc = routes == 2
+    pos = jnp.cumsum(esc.astype(jnp.int32)) - 1
+    slots = jnp.where(esc & (pos < capacity), pos, -1).astype(jnp.int32)
+    routes_ref[...] = routes
+    slots_ref[...] = slots
+    count_ref[0] = jnp.sum(esc.astype(jnp.int32))
+
+
+def triage_dynamic_pallas(conf: jax.Array, thresholds: jax.Array, *,
+                          capacity: int, interpret: bool = True):
+    """conf (N,) f32, thresholds (2,) f32 [alpha, beta] ->
+    (routes (N,) i32, slots (N,) i32, count (1,) i32)."""
+    (N,) = conf.shape
+    kernel = functools.partial(_triage_dyn_kernel, capacity=capacity)
+    return pl.pallas_call(
+        kernel,
+        in_specs=[pl.BlockSpec((N,), lambda: (0,)),
+                  pl.BlockSpec((2,), lambda: (0,))],
+        out_specs=(pl.BlockSpec((N,), lambda: (0,)),
+                   pl.BlockSpec((N,), lambda: (0,)),
+                   pl.BlockSpec((1,), lambda: (0,))),
+        out_shape=(jax.ShapeDtypeStruct((N,), jnp.int32),
+                   jax.ShapeDtypeStruct((N,), jnp.int32),
+                   jax.ShapeDtypeStruct((1,), jnp.int32)),
+        interpret=interpret,
+    )(conf, thresholds)

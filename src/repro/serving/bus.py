@@ -40,6 +40,26 @@ def _match(pattern: str, topic: str) -> bool:
     return fnmatch.fnmatch(topic, pattern)
 
 
+class FifoLink:
+    """Shared FIFO uplink: concurrent transfers serialize (the WAN model
+    whose saturation reproduces cloud-only's latency, Table II)."""
+
+    def __init__(self, MBps: float, rtt_s: float = 0.0) -> None:
+        self.MBps = MBps
+        self.rtt_s = rtt_s
+        self.free_at = 0.0
+
+    def send(self, t: float, nbytes: int) -> float:
+        """Start a transfer at ``t``; returns its delivery time."""
+        start = max(t, self.free_at)
+        self.free_at = start + nbytes / (self.MBps * 1e6)
+        return self.free_at + self.rtt_s
+
+    def backlog(self, t: float) -> float:
+        """Seconds of queued transfers ahead of a new send at ``t``."""
+        return max(0.0, self.free_at - t)
+
+
 class ParamDB:
     """Replicated parameter store (the SQLite analogue).
 

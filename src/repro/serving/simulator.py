@@ -25,8 +25,9 @@ import numpy as np
 
 from repro.core.latency import LatencyEstimator
 from repro.core.scheduler import CLOUD, Scheduler
+from repro.core.scoring import f_score as _f_score
 from repro.core.thresholds import ThresholdState
-from repro.serving.bus import Bus, ParamDB
+from repro.serving.bus import Bus, FifoLink, ParamDB
 
 
 @dataclasses.dataclass
@@ -66,14 +67,7 @@ class SimResult:
 
     # --- metrics --------------------------------------------------------------
     def f_score(self, lam: float = 2.0) -> float:
-        tp = int(np.sum(self.decisions & self.truths))
-        fp = int(np.sum(self.decisions & ~self.truths))
-        fn = int(np.sum(~self.decisions & self.truths))
-        p = tp / max(tp + fp, 1)
-        r = tp / max(tp + fn, 1)
-        if p + r == 0:
-            return 0.0
-        return (1 + lam ** 2) * p * r / (lam ** 2 * p + r)
+        return _f_score(self.decisions, self.truths, lam)
 
     @property
     def avg_latency(self) -> float:
@@ -143,10 +137,7 @@ class CloudEdgeSim:
         This is what makes cloud-only slow in the paper (Table II): the
         uplink saturates and upload queueing dominates end-to-end latency.
         """
-        start = max(t, self._link_free)
-        done = start + nbytes / (self.link.uplink_MBps * 1e6)
-        self._link_free = done
-        return done + self.link.rtt_s
+        return self._uplink.send(t, nbytes)
 
     def run(self, items: Sequence[Item]) -> SimResult:
         """Discrete-event loop: arrivals are scheduled with the *current*
@@ -166,7 +157,7 @@ class CloudEdgeSim:
 
         pq: List = []   # (time, seq, kind, payload)
         self._seq = 0
-        self._link_free = 0.0
+        self._uplink = FifoLink(self.link.uplink_MBps, self.link.rtt_s)
 
         def push(t, kind, payload):
             self._seq += 1

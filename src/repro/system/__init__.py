@@ -1,0 +1,35 @@
+"""End-to-end multi-camera cloud-edge query system (the paper, composed).
+
+``run_query(scenario)`` wires camera streams -> per-edge batched Pallas
+triage -> Eq. 7 allocator -> per-node queues -> metrics.  Scenario presets
+cover the paper's three settings (Tables II-IV) plus beyond-paper stress
+(bursty crowds, straggler/failing edge).
+"""
+from repro.system.metrics import QueryReport
+from repro.system.pipeline import QueryPipeline, run_query
+from repro.system.scenario import (
+    SCENARIOS,
+    SCHEMES,
+    Scenario,
+    bursty_crowds,
+    heterogeneous_multi_edge,
+    homogeneous_multi_edge,
+    single_edge,
+    straggler_edge,
+    synthetic_confidence_stream,
+)
+
+__all__ = [
+    "QueryPipeline",
+    "QueryReport",
+    "SCENARIOS",
+    "SCHEMES",
+    "Scenario",
+    "bursty_crowds",
+    "heterogeneous_multi_edge",
+    "homogeneous_multi_edge",
+    "run_query",
+    "single_edge",
+    "straggler_edge",
+    "synthetic_confidence_stream",
+]

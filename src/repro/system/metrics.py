@@ -1,0 +1,79 @@
+"""Per-query metrics for the end-to-end pipeline (Tables II-IV columns).
+
+``QueryReport`` is the harness's single result object: per-item latencies and
+decisions against ground truth, bandwidth split into WAN (edge->cloud upload)
+and LAN (edge->edge re-dispatch), per-tick queue-length timelines, and the
+count of batched triage kernel launches (exactly one per edge per tick on the
+cascade schemes — asserted by the smoke tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.scoring import f_score as _f_score
+
+
+@dataclasses.dataclass
+class QueryReport:
+    scenario: str
+    scheme: str
+    latencies: np.ndarray                  # (n_items,) seconds, finish order
+    decisions: np.ndarray                  # (n_items,) bool: "is query object"
+    truths: np.ndarray                     # (n_items,) bool ground truth
+    finish_times: np.ndarray               # (n_items,) absolute seconds
+    uploaded_bytes: int                    # shipped over the WAN uplink
+    lan_bytes: int                         # shipped edge-to-edge
+    escalated: int                         # items sent for re-classification
+    rerouted: int                          # raw batches shed / failed-over
+    kernel_launches: int                   # batched triage_pallas calls
+    ticks: int                             # scheduler intervals simulated
+    queue_timeline: Dict[int, np.ndarray]  # node -> (ticks,) queue length
+    per_node_busy: Dict[int, float]        # node -> total service seconds
+    per_node_served: Dict[int, int]        # node -> items serviced
+
+    # --- accuracy -------------------------------------------------------------
+    def f_score(self, lam: float = 2.0) -> float:
+        """F_lambda (paper uses F2: recall-weighted)."""
+        return _f_score(self.decisions, self.truths, lam)
+
+    # --- latency --------------------------------------------------------------
+    @property
+    def avg_latency(self) -> float:
+        return float(np.mean(self.latencies)) if len(self.latencies) else 0.0
+
+    @property
+    def p99_latency(self) -> float:
+        return float(np.percentile(self.latencies, 99)) \
+            if len(self.latencies) else 0.0
+
+    @property
+    def latency_var(self) -> float:
+        return float(np.var(self.latencies)) if len(self.latencies) else 0.0
+
+    def summary(self) -> Dict[str, float]:
+        """Flat row with the Tables II-IV column schema (+ harness extras)."""
+        return {
+            "scheme": self.scheme,
+            "accuracy_F2": round(self.f_score(2.0), 4),
+            "avg_latency_s": round(self.avg_latency, 3),
+            "p99_latency_s": round(self.p99_latency, 3),
+            "latency_var": round(self.latency_var, 3),
+            "bandwidth_MB": round(self.uploaded_bytes / 1e6, 2),
+            "lan_MB": round(self.lan_bytes / 1e6, 2),
+            "escalated": self.escalated,
+            "rerouted": self.rerouted,
+            "kernel_launches": self.kernel_launches,
+            "ticks": self.ticks,
+        }
+
+
+def merge_timelines(samples: List[Dict[int, int]]) -> Dict[int, np.ndarray]:
+    """Per-tick {node: queue_len} samples -> {node: (ticks,) array}."""
+    if not samples:
+        return {}
+    nodes = sorted(samples[0])
+    return {n: np.asarray([s[n] for s in samples], dtype=np.int64)
+            for n in nodes}

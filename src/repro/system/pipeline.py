@@ -1,0 +1,395 @@
+"""End-to-end multi-camera cloud-edge query pipeline (the paper's system).
+
+Tick-driven, event-accurate harness composing every SurveilEdge piece:
+
+  camera streams         repro.data.synthetic_video arrivals (or a pre-scored
+        |                workload from repro.serving.workload)
+  per-edge batched       ONE ``triage_batched`` Pallas launch per edge per
+  cascade triage         tick over all of that edge's camera detections,
+        |                with the *current* Eqs. 8-9 thresholds as runtime
+        |                inputs (no retrace as they adapt)
+  Eq. 7 allocator        escalations routed to argmin_j Q_j * t_j across the
+        |                cloud and every live edge (repro.core.scheduler)
+  per-node queues        FIFO service with calibrated latency profiles: edge
+        |                CQ model vs cloud model vs heavyweight re-classify,
+        |                WAN uplink as a shared FIFO, LAN edge-to-edge links
+  metrics                per-query latency / F2 accuracy / bandwidth + queue
+                         timelines (repro.system.metrics.QueryReport)
+
+Thresholds adapt online: every enqueue/complete refreshes Eqs. 8-9 through
+the scheduler exactly as the in-process parameter bus replicates them.
+Beyond-paper stress is first-class: scenarios may declare traffic bursts and
+mid-run edge failures (queued work is re-dispatched, the dead edge's cameras
+re-home to surviving nodes via Eq. 7).
+
+Entry point: ``run_query(scenario) -> QueryReport``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.scheduler import CLOUD, Scheduler
+from repro.core.thresholds import ThresholdState
+from repro.kernels import ops
+from repro.serving.bus import Bus, FifoLink, ParamDB
+from repro.serving.simulator import Item
+from repro.system import metrics as MX
+from repro.system.scenario import Scenario, synthetic_confidence_stream
+
+# route codes emitted by the triage kernel
+ACCEPT, REJECT, ESCALATE = 0, 1, 2
+
+
+@dataclasses.dataclass
+class _Task:
+    """One item travelling through the pipeline."""
+    item: Item
+    phase: str                    # 'classify' (CQ) or 'reclassify' (accurate)
+    decision: Optional[bool]      # set for classify tasks at triage time
+    tx_s: float = 0.0             # transfer time to attribute to the node
+
+
+class QueryPipeline:
+    """Event loop over one scenario.  Build once, ``run()`` once."""
+
+    def __init__(self, sc: Scenario):
+        self.sc = sc
+        self.rng = np.random.default_rng(sc.seed + 1)
+        # topology: cloud is node 0, edges 1..E (service-time multipliers)
+        self.service_s: Dict[int, float] = {
+            CLOUD: sc.edge_service_s / sc.cloud_speedup}
+        for nid, mult in zip(sc.edge_ids, sc.edge_speeds):
+            self.service_s[nid] = sc.edge_service_s * mult
+        for t_fail, nid in sc.failures:
+            if nid not in self.service_s or nid == CLOUD:
+                raise ValueError(
+                    f"scenario {sc.name!r}: failure at t={t_fail} references "
+                    f"node {nid}, but failable edges are {list(sc.edge_ids)}")
+        # the pipeline owns the cascade thresholds: Eqs. 8-9 are driven once
+        # per edge-batch by the drain of the node Eq. 7 would hand an
+        # escalation to (incl. WAN backlog), with slow idle-widening —
+        # not by every parameter write as the per-write refresh inside
+        # Scheduler does (that oscillates between idle edges and the
+        # loaded cloud path).  The scheduler keeps its own default
+        # ThresholdState, which this pipeline never reads.
+        if sc.scheme == "surveiledge_fixed":
+            a, b = sc.fixed_thresholds or (0.8, 0.1)
+            self.th = ThresholdState(alpha=a, beta=b, gamma1=0.0,
+                                     gamma2=b / max(1.0 - a, 1e-6))
+        else:
+            self.th = ThresholdState(gamma1_up=0.005)
+        self.sched = Scheduler(sorted(self.service_s),
+                               interval_s=sc.interval_s)
+        self.bus = Bus()
+        self.db = ParamDB(self.bus)
+        for nid, svc in self.service_s.items():
+            self.db.put(f"t{nid}", svc)
+            self.db.put(f"Q{nid}", 0)
+            self.sched.nodes[nid].estimator.t = svc
+
+    # --- stochastic service / links ------------------------------------------
+    def _service_time(self, node: int, phase: str) -> float:
+        base = self.service_s[node]
+        if phase == "reclassify" and node != CLOUD:
+            base *= self.sc.reclassify_factor
+        return float(base * self.rng.lognormal(0.0, 0.15))
+
+    def _wan_done(self, t: float, nbytes: int) -> float:
+        """Shared WAN uplink: FIFO — concurrent uploads serialize."""
+        return self._uplink.send(t, nbytes)
+
+    def _lan_done(self, t: float, nbytes: int) -> float:
+        """Edge-to-edge link: dedicated, non-contending."""
+        return t + nbytes / (self.sc.lan_MBps * 1e6) + self.sc.rtt_s
+
+    def _uplink_backlog(self, t: float) -> float:
+        """Seconds of queued WAN transfers ahead of a new upload."""
+        return self._uplink.backlog(t)
+
+    # --- event machinery ------------------------------------------------------
+    def _push(self, t: float, kind: str, payload) -> None:
+        self._seq += 1
+        heapq.heappush(self._pq, (t, self._seq, kind, payload))
+
+    def _enqueue(self, t: float, node: int, task: _Task) -> None:
+        self._queues[node].append(task)
+        self.sched.on_enqueue(node)
+        self.db.put(f"Q{node}", self.sched.nodes[node].queue_len)
+        if not self._busy[node]:
+            self._start_service(t, node)
+
+    def _start_service(self, t: float, node: int) -> None:
+        task = self._queues[node].pop(0)
+        self._busy[node] = True
+        svc = self._service_time(node, task.phase)
+        self._inflight[node] = (task, svc, t)
+        self._busy_s[node] += svc
+        self._push(t + svc, "done", (node, task, svc))
+
+    def _finish(self, t: float, node: int, it: Item, decision: bool) -> None:
+        self._lat.append(t - it.t_arrival)
+        self._dec.append(decision)
+        self._tru.append(it.is_query)
+        self._fin.append(t)
+        self._served[node] += 1
+
+    def _dispatch(self, t: float, src: int, task: _Task,
+                  count_escalated: bool, exclude_src: bool = False) -> None:
+        """Route one re-classification task via Eq. 7 and ship it.
+
+        ``exclude_src`` is for overload shedding: work shed *because* src
+        is drowning must not be allowed to win the argmin and land right
+        back on src at the heavier re-classify cost.
+        """
+        if self.sc.scheme == "surveiledge_fixed":
+            target = CLOUD          # local-edge-first: escalations go up
+        else:
+            try:
+                # edge_only has no cloud path: its failovers stay on the
+                # surviving edges (cloud only as a last resort below)
+                target = self.sched.select_node(
+                    exclude_cloud=self.sc.scheme == "edge_only",
+                    exclude={src} if exclude_src else (),
+                    extra_cost={CLOUD: self._uplink_backlog(t)})
+            except ValueError:
+                target = CLOUD      # the cloud never fails in our scenarios
+        if count_escalated:
+            self._escalated += 1
+        nbytes = task.item.nbytes
+        if target == src:
+            self._push(t, "xfer", (target, task))
+        elif target == CLOUD:
+            self._uploaded += nbytes
+            done = self._wan_done(t, nbytes)
+            task.tx_s += done - t
+            self._push(done, "xfer", (target, task))
+        else:
+            self._lan_bytes += nbytes
+            done = self._lan_done(t, nbytes)
+            task.tx_s += done - t
+            self._push(done, "xfer", (target, task))
+
+    # --- per-tick batched triage ---------------------------------------------
+    def _refresh_thresholds(self, t: float, edge: int) -> None:
+        """Eqs. 8-9 driven by the drain of "the chosen queue": the busiest
+        of this edge's own queue (where classification tasks land) and the
+        node Eq. 7 would hand an escalation to (incl. WAN backlog)."""
+        if self.sc.scheme != "surveiledge":
+            return
+        try:
+            d = self.sched.select_node(
+                extra_cost={CLOUD: self._uplink_backlog(t)})
+        except ValueError:
+            d = CLOUD
+        esc_drain = self.sched.nodes[d].drain_time
+        if d == CLOUD:
+            esc_drain += self._uplink_backlog(t)
+        drain = max(self.sched.nodes[edge].drain_time, esc_drain)
+        self.th = self.th.update(drain, 1.0, self.sc.interval_s)
+        self.db.put("alpha", self.th.alpha)
+        self.db.put("beta", self.th.beta)
+
+    def _triage_batch(self, t: float, edge: int, batch: List[Item]) -> None:
+        self._refresh_thresholds(t, edge)
+        th = self.th
+        conf = np.asarray([it.conf for it in batch], np.float32)
+        routes, slots, _ = ops.triage_batched(
+            conf, alpha=th.alpha, beta=th.beta,
+            capacity=self.sc.escalation_capacity)
+        self._launches += 1
+        routes, slots = np.asarray(routes), np.asarray(slots)
+        if (self.sc.scheme == "surveiledge"
+                and self.sched.nodes[edge].drain_time
+                > self.sc.offload_drain_s):
+            # the home edge can't drain its queue within the gate: the Eq. 7
+            # allocator sheds this tick's raw batch across cloud/edges (the
+            # overloaded home has maximal Q*t, so it is effectively skipped)
+            for it in batch:
+                self._rerouted += 1
+                self._dispatch(t, edge, _Task(it, "reclassify", None),
+                               count_escalated=False, exclude_src=True)
+            return
+        for it, route, slot in zip(batch, routes, slots):
+            if route == ESCALATE and slot >= 0:
+                decision = None                     # cloud-model's call
+            elif route == ESCALATE:                 # capacity overflow:
+                decision = it.conf > 0.5            # stays un-escalated
+            else:
+                decision = route == ACCEPT
+            self._enqueue(t, edge, _Task(it, "classify", decision))
+
+    def _failover_task(self, it: Item) -> _Task:
+        """A dead edge's work re-homed to a survivor: under edge_only the
+        peer re-runs the CQ model (conf > 0.5); otherwise the heavyweight
+        re-classifier answers."""
+        if self.sc.scheme == "edge_only":
+            return _Task(it, "classify", it.conf > 0.5)
+        return _Task(it, "reclassify", None)
+
+    def _fail_node(self, t: float, node: int) -> None:
+        """Edge death: drop it from Eq. 7, re-dispatch its queued and
+        in-flight work to survivors."""
+        self._dead.add(node)
+        self.sched.mark_down(node)
+        stranded = list(self._queues[node])
+        self._queues[node].clear()
+        if self._inflight[node] is not None:
+            task, svc, started = self._inflight[node]
+            stranded.insert(0, task)
+            self._inflight[node] = None
+            # aborted mid-service: the node did work from `started` until
+            # the failure; only the unserved remainder is not busy time
+            self._busy_s[node] -= max(0.0, svc - (t - started))
+        self._busy[node] = False
+        self.sched.nodes[node].queue_len = 0
+        self.db.put(f"Q{node}", 0)
+        for task in stranded:
+            self._rerouted += 1
+            self._dispatch(t, node, self._failover_task(task.item),
+                           count_escalated=False)
+
+    # --- main loop ------------------------------------------------------------
+    def run(self, items: Sequence[Item]) -> MX.QueryReport:
+        sc = self.sc
+        cascade = sc.scheme in ("surveiledge", "surveiledge_fixed")
+        self._pq: List = []
+        self._seq = 0
+        self._uplink = FifoLink(sc.uplink_MBps, sc.rtt_s)
+        self._queues: Dict[int, List[_Task]] = {n: [] for n in self.service_s}
+        self._busy: Dict[int, bool] = {n: False for n in self.service_s}
+        self._inflight: Dict[int, Optional[Tuple[_Task, float, float]]] = {
+            n: None for n in self.service_s}
+        self._busy_s: Dict[int, float] = {n: 0.0 for n in self.service_s}
+        self._served: Dict[int, int] = {n: 0 for n in self.service_s}
+        self._dead: set = set()
+        self._lat: List[float] = []
+        self._dec: List[bool] = []
+        self._tru: List[bool] = []
+        self._fin: List[float] = []
+        self._uploaded = 0
+        self._lan_bytes = 0
+        self._escalated = 0
+        self._rerouted = 0
+        self._launches = 0
+        tick_samples: List[Dict[int, int]] = []
+
+        # arrivals: cloud_only streams per item; the cascade/edge_only paths
+        # batch each tick's detections per home edge (one triage launch each)
+        last_t = max((it.t_arrival for it in items), default=0.0)
+        n_ticks = max(1, int(math.ceil(
+            max(sc.duration_s, last_t + 1e-9) / sc.interval_s)))
+        if sc.scheme == "cloud_only":
+            for it in items:
+                self._push(it.t_arrival, "arrive", it)
+        else:
+            groups: Dict[Tuple[int, int], List[Item]] = {}
+            for it in items:
+                k = int(it.t_arrival // sc.interval_s)
+                groups.setdefault((k, it.edge_device), []).append(it)
+            for (k, edge), batch in sorted(groups.items()):
+                self._push((k + 1) * sc.interval_s, "batch", (edge, batch))
+        for k in range(1, n_ticks + 1):
+            self._push(k * sc.interval_s, "sample", None)
+        for t_fail, node in sc.failures:
+            self._push(t_fail, "fail", node)
+
+        while self._pq:
+            t, _, kind, payload = heapq.heappop(self._pq)
+            if kind == "sample":
+                tick_samples.append({
+                    n: len(self._queues[n]) + int(self._busy[n])
+                    for n in self.service_s})
+            elif kind == "arrive":               # cloud_only
+                it = payload
+                self._uploaded += it.nbytes
+                task = _Task(it, "reclassify", None)
+                done = self._wan_done(t, it.nbytes)
+                task.tx_s = done - t
+                self._push(done, "xfer", (CLOUD, task))
+            elif kind == "batch":
+                edge, batch = payload
+                if edge in self._dead:
+                    # dead edge's cameras re-home: raw frames to survivors
+                    for it in batch:
+                        self._rerouted += 1
+                        self._dispatch(t, edge, self._failover_task(it),
+                                       count_escalated=False)
+                elif cascade:
+                    self._triage_batch(t, edge, batch)
+                else:                            # edge_only
+                    for it in batch:
+                        self._enqueue(t, edge, _Task(it, "classify",
+                                                     it.conf > 0.5))
+            elif kind == "xfer":
+                node, task = payload
+                if node in self._dead:           # died while in transit
+                    self._rerouted += 1
+                    self._dispatch(t, node, task, count_escalated=False)
+                else:
+                    self._enqueue(t, node, task)
+            elif kind == "fail":
+                if payload not in self._dead:
+                    self._fail_node(t, payload)
+            elif kind == "done":
+                node, task, svc = payload
+                if node in self._dead:
+                    continue                     # work was re-dispatched
+                self._busy[node] = False
+                self._inflight[node] = None
+                self.sched.on_complete(node, svc + task.tx_s)
+                self.db.put(f"t{node}", self.sched.nodes[node].estimator.t)
+                self.db.put(f"Q{node}", self.sched.nodes[node].queue_len)
+                if task.phase == "reclassify":
+                    # accurate model == ground truth (paper: ResNet-152)
+                    self._finish(t, node, task.item, task.item.is_query)
+                elif task.decision is None:      # escalate: ship onward
+                    self._dispatch(t, node,
+                                   _Task(task.item, "reclassify", None),
+                                   count_escalated=True)
+                else:
+                    self._finish(t, node, task.item, task.decision)
+                if self._queues[node]:
+                    self._start_service(t, node)
+
+        return MX.QueryReport(
+            scenario=sc.name,
+            scheme=sc.scheme,
+            latencies=np.asarray(self._lat),
+            decisions=np.asarray(self._dec, bool),
+            truths=np.asarray(self._tru, bool),
+            finish_times=np.asarray(self._fin),
+            uploaded_bytes=self._uploaded,
+            lan_bytes=self._lan_bytes,
+            escalated=self._escalated,
+            rerouted=self._rerouted,
+            kernel_launches=self._launches,
+            ticks=n_ticks,
+            queue_timeline=MX.merge_timelines(tick_samples),
+            per_node_busy=dict(self._busy_s),
+            per_node_served=dict(self._served),
+        )
+
+
+def run_query(scenario: Scenario,
+              items: Optional[Sequence[Item]] = None) -> MX.QueryReport:
+    """Run one query scenario end to end and return its ``QueryReport``.
+
+    ``items`` (or ``scenario.items``) injects a pre-scored detection stream
+    — e.g. the CQ-model-scored benchmark workload; camera->edge homes are
+    remapped onto this scenario's topology.  Otherwise a model-free stream
+    is synthesized from the scenario's camera fleet.
+    """
+    stream = items if items is not None else scenario.items
+    if stream is None:
+        stream = synthetic_confidence_stream(scenario)
+    else:
+        E = scenario.num_edges
+        stream = [dataclasses.replace(
+            it, edge_device=(it.edge_device - 1) % E + 1) for it in stream]
+        stream.sort(key=lambda it: it.t_arrival)
+    return QueryPipeline(scenario).run(stream)

@@ -1,0 +1,146 @@
+"""Scenario definitions for the end-to-end cloud-edge query pipeline.
+
+A ``Scenario`` fixes everything the harness needs: topology (edge speed
+multipliers + one cloud), link capacities, the camera fleet and query
+duration, the scheme, and optional stress events (traffic bursts, edge
+failures).  Paper settings (Tables II-IV) and beyond-paper settings are
+plain factory functions registered in ``SCENARIOS``.
+
+Scenarios can either carry a pre-scored item stream (``items`` — e.g. the
+benchmark workload scored by the fine-tuned CQ model from
+``repro.serving.workload``) or let the harness synthesize one cheaply with
+``synthetic_confidence_stream`` (confidence drawn from class-conditional
+Beta distributions — no model in the loop, for tests/examples).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.data import synthetic_video as SV
+from repro.serving.simulator import Item
+
+SCHEMES = ("surveiledge", "surveiledge_fixed", "edge_only", "cloud_only")
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    name: str
+    scheme: str = "surveiledge"
+    # --- fleet ---------------------------------------------------------------
+    num_cameras: int = 8
+    duration_s: float = 120.0
+    interval_s: float = 1.0                 # scheduler tick == sampling period
+    # --- topology ------------------------------------------------------------
+    edge_speeds: Tuple[float, ...] = (1.0,)  # service-time multiplier per edge
+    edge_service_s: float = 0.08             # 1.0x edge per-item CQ inference
+    cloud_speedup: float = 6.0               # cloud GPU vs 1.0x edge CPU
+    reclassify_factor: float = 2.0           # accurate model vs CQ model cost
+    offload_drain_s: float = 2.0             # Eq. 7 sheds raw batches above
+    #                                          this home-edge drain time
+    # --- links ---------------------------------------------------------------
+    uplink_MBps: float = 0.5                 # shared WAN FIFO, edge -> cloud
+    lan_MBps: float = 10.0                   # edge <-> edge, non-contending
+    rtt_s: float = 0.1
+    # --- cascade -------------------------------------------------------------
+    escalation_capacity: int = 64            # per edge per tick (kernel buffer)
+    fixed_thresholds: Optional[Tuple[float, float]] = None
+    # --- stress events -------------------------------------------------------
+    burst_boost: Optional[float] = None      # override CameraSpec.busy_boost
+    burst_rate: Optional[float] = None       # override CameraSpec.base_rate
+    failures: Tuple[Tuple[float, int], ...] = ()   # (t_s, edge node id)
+    # --- stream --------------------------------------------------------------
+    seed: int = 0
+    items: Optional[Sequence[Item]] = None   # injected pre-scored stream
+
+    @property
+    def num_edges(self) -> int:
+        return len(self.edge_speeds)
+
+    @property
+    def edge_ids(self) -> Tuple[int, ...]:
+        return tuple(range(1, self.num_edges + 1))
+
+    def with_scheme(self, scheme: str) -> "Scenario":
+        assert scheme in SCHEMES, scheme
+        return dataclasses.replace(self, scheme=scheme)
+
+
+def synthetic_confidence_stream(sc: Scenario) -> List[Item]:
+    """Model-free item stream: Poisson arrivals from the procedural camera
+    fleet, edge confidence drawn from class-conditional Beta distributions
+    (query objects ~ Beta(8,2), others ~ Beta(2,8)) — overlapping enough
+    that the [beta, alpha] escalation band carries real mass."""
+    rng = np.random.default_rng(sc.seed)
+    cams = SV.make_cameras(sc.num_cameras, seed=sc.seed)
+    if sc.burst_boost is not None or sc.burst_rate is not None:
+        cams = [dataclasses.replace(
+            c,
+            busy_boost=sc.burst_boost if sc.burst_boost is not None
+            else c.busy_boost,
+            base_rate=sc.burst_rate if sc.burst_rate is not None
+            else c.base_rate) for c in cams]
+    items: List[Item] = []
+    for t in np.arange(0.0, sc.duration_s, sc.interval_s):
+        for cam in cams:
+            n = rng.poisson(cam.rate_at(float(t)) * sc.interval_s)
+            for _ in range(int(n)):
+                cls = int(rng.choice(SV.NUM_CLASSES, p=cam.class_mix))
+                is_query = cls == SV.QUERY_CLASS
+                conf = float(rng.beta(8, 2) if is_query else rng.beta(2, 8))
+                items.append(Item(
+                    t_arrival=float(t + rng.uniform(0, sc.interval_s)),
+                    camera=cam.cam_id,
+                    edge_device=cam.cam_id % sc.num_edges + 1,
+                    conf=conf, is_query=is_query))
+    items.sort(key=lambda it: it.t_arrival)
+    return items
+
+
+# --- paper settings (Tables II-IV) -------------------------------------------
+
+def single_edge(**kw) -> Scenario:
+    """Table II: one edge + cloud."""
+    return Scenario(name="single_edge", edge_speeds=(1.0,), **kw)
+
+
+def homogeneous_multi_edge(**kw) -> Scenario:
+    """Table III: three identical edges + cloud."""
+    return Scenario(name="homogeneous_multi_edge",
+                    edge_speeds=(1.0, 1.0, 1.0), **kw)
+
+
+def heterogeneous_multi_edge(**kw) -> Scenario:
+    """Table IV: 2/4/8-core edge analogues (1.0 / 0.5 / 0.25 x service)."""
+    return Scenario(name="heterogeneous_multi_edge",
+                    edge_speeds=(1.0, 0.5, 0.25), **kw)
+
+
+# --- beyond-paper settings ----------------------------------------------------
+
+def bursty_crowds(**kw) -> Scenario:
+    """Flash-crowd traffic: every camera's busy peaks are ~3x the paper
+    profile, driving the adaptive thresholds through their full range."""
+    return Scenario(name="bursty_crowds", edge_speeds=(1.0, 1.0, 1.0),
+                    burst_boost=9.0, burst_rate=1.5, **kw)
+
+
+def straggler_edge(**kw) -> Scenario:
+    """One 4x-slow straggler edge, and it *fails outright* two-thirds into
+    the run — Eq. 7 must route around it, then the harness re-dispatches its
+    queued work and re-homes its cameras' frames to the surviving nodes."""
+    duration = kw.pop("duration_s", 120.0)
+    return Scenario(name="straggler_edge", edge_speeds=(4.0, 1.0, 0.5),
+                    duration_s=duration,
+                    failures=((duration * 2 / 3, 1),), **kw)
+
+
+SCENARIOS: Dict[str, Callable[..., Scenario]] = {
+    "single_edge": single_edge,
+    "homogeneous_multi_edge": homogeneous_multi_edge,
+    "heterogeneous_multi_edge": heterogeneous_multi_edge,
+    "bursty_crowds": bursty_crowds,
+    "straggler_edge": straggler_edge,
+}
