@@ -2,13 +2,18 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
+# Parallelize the suite across cores when pytest-xdist is installed (CI
+# installs it via requirements-dev.txt; bare containers fall back to serial).
+XDIST := $(shell $(PY) -c "import xdist" 2>/dev/null && echo "-n auto")
+
 .PHONY: test bench-smoke bench dev-deps
 
 test:            ## tier-1 test suite (the verify gate for every PR)
-	$(PY) -m pytest -x -q
+	$(PY) -m pytest -x -q $(XDIST)
 
 bench-smoke:     ## fast end-to-end sanity: every scenario x scheme, no training
 	$(PY) examples/run_scenarios.py --cameras 4 --duration 30
+	$(PY) examples/run_scenarios.py --scenario city_scale --duration 20
 	$(PY) examples/quickstart.py
 
 bench:           ## full paper tables/figures (fine-tunes the workload; slow)

@@ -71,8 +71,8 @@ def run_schemes(wl: Workload, edge_service: Sequence[float], *,
 
 def print_table(name: str, rows: Dict[str, Dict[str, float]]) -> None:
     cols = ["accuracy_F2", "avg_latency_s", "p99_latency_s", "latency_var",
-            "bandwidth_MB", "escalated"]
+            "bandwidth_MB", "escalated", "launches_per_tick"]
     print(f"\n== {name} ==")
-    print(f"{'scheme':20s}" + "".join(f"{c:>16s}" for c in cols))
+    print(f"{'scheme':20s}" + "".join(f"{c:>18s}" for c in cols))
     for scheme, r in rows.items():
-        print(f"{scheme:20s}" + "".join(f"{r[c]:>16}" for c in cols))
+        print(f"{scheme:20s}" + "".join(f"{r[c]:>18}" for c in cols))

@@ -50,6 +50,19 @@ def run(verbose: bool = True):
                                      capacity=512, use_pallas=False), bytes_tr))
     rows.append(("triage_pallas_interp", _time(ops.triage, conf, alpha=0.8,
                                                beta=0.1, capacity=512), bytes_tr))
+    # fleet triage: the whole city_scale tick (64 edges x 512-wide bucket)
+    # in ONE launch — vs 64 per-edge launches per tick before
+    E, N = 64, 512
+    fleet_conf = jax.random.uniform(jax.random.PRNGKey(10), (E, N))
+    fleet_th = jnp.stack(
+        [jnp.full((E,), 0.8), jnp.full((E,), 0.1)], axis=1)
+    bytes_fleet = E * N * 4 * 3 + E * 2 * 4
+    rows.append(("triage_fleet_ref",
+                 _time(ops.triage_fleet, fleet_conf, fleet_th, capacity=64,
+                       use_pallas=False), bytes_fleet))
+    rows.append(("triage_fleet_pallas_interp",
+                 _time(ops.triage_fleet, fleet_conf, fleet_th, capacity=64),
+                 bytes_fleet))
     # flash attention (small shape; interpret mode on CPU)
     qk = jax.random.normal(jax.random.PRNGKey(3), (1, 4, 128, 64))
     kk = jax.random.normal(jax.random.PRNGKey(4), (1, 2, 128, 64))
@@ -65,7 +78,33 @@ def run(verbose: bool = True):
         out[name] = {"us_per_call": round(us, 1), "GB_s": round(gbps, 3)}
         if verbose:
             print(f"{name:28s} {us:10.1f} us  {gbps:8.3f} GB/s")
-    return out, {}
+    # the fleet kernel's headline is launch amortization: ONE (E, N) launch
+    # replaces E per-edge launches every scheduler tick.  Time the actual
+    # per-edge loop as the baseline.
+    def _per_edge_tick(conf, th, use_pallas=True):
+        return [ops.triage_batched(conf[e], alpha=float(th[e, 0]),
+                                   beta=float(th[e, 1]), capacity=64,
+                                   use_pallas=use_pallas)
+                for e in range(conf.shape[0])]
+
+    fleet_conf_np, fleet_th_np = (jax.device_get(fleet_conf),
+                                  jax.device_get(fleet_th))
+    us_loop = _time(_per_edge_tick, fleet_conf_np, fleet_th_np,
+                    n=3, use_pallas=False)
+    us_fleet = _time(ops.triage_fleet, fleet_conf, fleet_th, capacity=64,
+                     n=3, use_pallas=False)
+    derived = {
+        "fleet_launches_per_tick": 1,
+        "per_edge_launches_per_tick": E,
+        "fleet_launch_reduction": E,
+        "fleet_tick_speedup_vs_per_edge_loop": round(us_loop / us_fleet, 2),
+    }
+    if verbose:
+        print(f"fleet tick (E={E}, N={N}): 1 launch {us_fleet:.1f} us vs "
+              f"{E}-launch loop {us_loop:.1f} us -> "
+              f"{derived['fleet_tick_speedup_vs_per_edge_loop']}x, "
+              f"{E}x fewer launches")
+    return out, derived
 
 
 if __name__ == "__main__":

@@ -11,6 +11,11 @@ per-item latency) and s is the query sampling interval.  When the system is
 overloaded (drain > s) the bracket shrinks -> fewer cloud uploads; when idle
 it widens -> more reclassification -> higher accuracy.  alpha is clamped to
 [0.5, 1] and beta < 0.5 by construction (gamma2 in (0,1)).
+
+``ThresholdState`` is one edge's adaptation state.  The paper runs Eqs. 8-9
+on every edge device, so the end-to-end engine keeps one instance per edge
+(``repro.system.triage.TriageStage``) and feeds the resulting (E, 2) matrix
+to the fused fleet-triage kernel as runtime data.
 """
 from __future__ import annotations
 

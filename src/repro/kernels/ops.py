@@ -132,10 +132,57 @@ def triage_batched(conf: jax.Array, *, alpha: float, beta: float,
     """
     conf = jnp.asarray(conf, jnp.float32)
     (n,) = conf.shape
-    bucket = max(8, 1 << (max(n - 1, 1)).bit_length())
+    bucket = _bucket(n)
     if bucket != n:
         conf = jnp.pad(conf, (0, bucket - n), constant_values=-1.0)
     thresholds = jnp.asarray([alpha, beta], jnp.float32)
     routes, slots, count = _triage_dynamic(
         conf, thresholds, capacity=capacity, use_pallas=use_pallas)
     return routes[:n], slots[:n], count
+
+
+def _bucket(n: int, minimum: int = 8) -> int:
+    """Next power-of-two size >= n (jit-cache-stable padding bucket)."""
+    return max(minimum, 1 << (max(n - 1, 1)).bit_length())
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "use_pallas"))
+def _triage_fleet(conf: jax.Array, thresholds: jax.Array, *, capacity: int,
+                  use_pallas: bool = True):
+    if not use_pallas:
+        return _ref.triage_fleet_ref(conf, thresholds, capacity)
+    return _tr.triage_fleet_pallas(conf, thresholds, capacity=capacity,
+                                   interpret=INTERPRET)
+
+
+def triage_fleet(conf: jax.Array, thresholds: jax.Array, *, capacity: int,
+                 use_pallas: bool = True):
+    """Whole-fleet per-tick triage: ONE kernel launch for every edge.
+
+    ``conf`` is the (E, N) tick matrix — row e holds edge e's detections
+    this scheduler tick, right-padded with -1.0 where edges saw fewer than
+    N — and ``thresholds`` the (E, 2) per-edge runtime [alpha, beta] from
+    each edge's own Eqs. 8-9 state.  Returns (routes (E, N), slots (E, N),
+    counts (E,)); compaction and the ``capacity`` clamp are per edge row.
+
+    Both axes are padded up to power-of-two buckets (min 8) before the
+    launch so a run's stream of tick matrices hits a handful of cached
+    compilations, then the pads are sliced back off.  Pad lanes use
+    conf=-1.0, which always routes to 'reject' (beta >= 0) and therefore
+    can never claim an escalation slot or count; pad edge rows get
+    thresholds (1, 0) for the same reason.
+    """
+    conf = jnp.asarray(conf, jnp.float32)
+    thresholds = jnp.asarray(thresholds, jnp.float32)
+    E, n = conf.shape
+    eb, nb = _bucket(E), _bucket(n)
+    if nb != n:
+        conf = jnp.pad(conf, ((0, 0), (0, nb - n)), constant_values=-1.0)
+    if eb != E:
+        conf = jnp.pad(conf, ((0, eb - E), (0, 0)), constant_values=-1.0)
+        thresholds = jnp.concatenate(
+            [thresholds,
+             jnp.tile(jnp.asarray([[1.0, 0.0]], jnp.float32), (eb - E, 1))])
+    routes, slots, counts = _triage_fleet(
+        conf, thresholds, capacity=capacity, use_pallas=use_pallas)
+    return routes[:E, :n], slots[:E, :n], counts[:E]

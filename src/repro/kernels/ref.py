@@ -85,3 +85,21 @@ def triage_ref(conf: jax.Array, alpha: float, beta: float,
     pos = jnp.cumsum(esc.astype(jnp.int32)) - 1
     slots = jnp.where(esc & (pos < capacity), pos, -1).astype(jnp.int32)
     return routes, slots, jnp.sum(esc.astype(jnp.int32))
+
+
+def triage_fleet_ref(conf: jax.Array, thresholds: jax.Array,
+                     capacity: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-edge triage over the whole fleet's tick matrix.
+
+    conf (E, N) f32, thresholds (E, 2) f32 [alpha, beta] per edge ->
+    routes (E, N) int32, slots (E, N) int32 (per-row stable compaction,
+    each edge's escalation buffer capped at ``capacity``), counts (E,) int32.
+    """
+    alpha = thresholds[:, 0:1]
+    beta = thresholds[:, 1:2]
+    routes = jnp.where(conf > alpha, 0,
+                       jnp.where(conf < beta, 1, 2)).astype(jnp.int32)
+    esc = routes == 2
+    pos = jnp.cumsum(esc.astype(jnp.int32), axis=1) - 1
+    slots = jnp.where(esc & (pos < capacity), pos, -1).astype(jnp.int32)
+    return routes, slots, jnp.sum(esc.astype(jnp.int32), axis=1)

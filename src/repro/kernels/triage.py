@@ -1,10 +1,19 @@
-"""Pallas TPU kernel: cascade triage + escalation compaction (core C1).
+"""Pallas TPU kernels: cascade triage + escalation compaction (core C1).
 
 One pass over a batch of edge confidences produces route codes, escalation
 buffer slots (stable prefix-sum compaction) and the escalated count.  This
 is the per-batch hot path of the SurveilEdge allocator: on TPU it runs as a
 single VMEM-resident block (batch sizes are << VMEM), avoiding three
 separate elementwise+scan launches.
+
+Two granularities share one kernel body:
+
+  * ``triage_dynamic_pallas`` — one edge's (N,) batch, thresholds as a (2,)
+    runtime input (``triage_pallas`` delegates here with its static
+    alpha/beta packed into that input).
+  * ``triage_fleet_pallas`` — the whole fleet's (E, N) tick matrix with an
+    (E, 2) per-edge threshold matrix: every edge's triage + compaction in
+    ONE launch per scheduler tick, instead of one launch per edge per tick.
 """
 from __future__ import annotations
 
@@ -15,46 +24,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _triage_kernel(conf_ref, routes_ref, slots_ref, count_ref, *,
-                   alpha: float, beta: float, capacity: int):
-    conf = conf_ref[...]
-    routes = jnp.where(conf > alpha, 0,
-                       jnp.where(conf < beta, 1, 2)).astype(jnp.int32)
-    esc = routes == 2
-    pos = jnp.cumsum(esc.astype(jnp.int32)) - 1
-    slots = jnp.where(esc & (pos < capacity), pos, -1).astype(jnp.int32)
-    routes_ref[...] = routes
-    slots_ref[...] = slots
-    count_ref[0] = jnp.sum(esc.astype(jnp.int32))
-
-
-def triage_pallas(conf: jax.Array, *, alpha: float, beta: float,
-                  capacity: int, interpret: bool = True):
-    """conf (N,) f32 -> (routes (N,) i32, slots (N,) i32, count (1,) i32)."""
-    (N,) = conf.shape
-    kernel = functools.partial(_triage_kernel, alpha=alpha, beta=beta,
-                               capacity=capacity)
-    return pl.pallas_call(
-        kernel,
-        in_specs=[pl.BlockSpec((N,), lambda: (0,))],
-        out_specs=(pl.BlockSpec((N,), lambda: (0,)),
-                   pl.BlockSpec((N,), lambda: (0,)),
-                   pl.BlockSpec((1,), lambda: (0,))),
-        out_shape=(jax.ShapeDtypeStruct((N,), jnp.int32),
-                   jax.ShapeDtypeStruct((N,), jnp.int32),
-                   jax.ShapeDtypeStruct((1,), jnp.int32)),
-        interpret=interpret,
-    )(conf)
-
-
 def _triage_dyn_kernel(conf_ref, ab_ref, routes_ref, slots_ref, count_ref, *,
                        capacity: int):
-    """Same fused pass with alpha/beta read from a (2,) runtime input.
+    """Fused triage + stable compaction, alpha/beta as a (2,) runtime input.
 
-    The static-threshold kernel above bakes alpha/beta into the trace, which
-    is fine for one-off calls but forces a retrace every time Eqs. 8-9 move
-    the thresholds — i.e. every scheduler tick.  Reading them from VMEM keeps
-    the per-tick hot path at a single cached compilation.
+    Baking alpha/beta into the trace would force a retrace every time
+    Eqs. 8-9 move the thresholds — i.e. every scheduler tick.  Reading them
+    from VMEM keeps the per-tick hot path at a single cached compilation.
     """
     conf = conf_ref[...]
     alpha = ab_ref[0]
@@ -85,5 +61,64 @@ def triage_dynamic_pallas(conf: jax.Array, thresholds: jax.Array, *,
         out_shape=(jax.ShapeDtypeStruct((N,), jnp.int32),
                    jax.ShapeDtypeStruct((N,), jnp.int32),
                    jax.ShapeDtypeStruct((1,), jnp.int32)),
+        interpret=interpret,
+    )(conf, thresholds)
+
+
+def triage_pallas(conf: jax.Array, *, alpha: float, beta: float,
+                  capacity: int, interpret: bool = True):
+    """conf (N,) f32 -> (routes (N,) i32, slots (N,) i32, count (1,) i32).
+
+    Static-threshold convenience wrapper: packs alpha/beta into the dynamic
+    kernel's (2,) threshold input (one kernel body to maintain; the static
+    values still specialize the trace via the input array's contents only,
+    so distinct thresholds share one compilation).
+    """
+    thresholds = jnp.asarray([alpha, beta], jnp.float32)
+    return triage_dynamic_pallas(conf, thresholds, capacity=capacity,
+                                 interpret=interpret)
+
+
+def _triage_fleet_kernel(conf_ref, ab_ref, routes_ref, slots_ref, count_ref,
+                         *, capacity: int):
+    """(E, N) fleet tick matrix, per-edge (E, 2) runtime thresholds.
+
+    Row e is edge e's padded per-tick batch; compaction (cumsum along the
+    camera axis) and the escalation-capacity clamp are per row, so each
+    edge keeps its own private escalation buffer exactly as in the
+    one-edge kernel.  The whole fleet is one VMEM-resident block: for the
+    city-scale operating point (64 edges x 512-wide tick buckets) the
+    inputs are ~130 KB, far below VMEM, and the launch count per tick
+    drops from E to 1.
+    """
+    conf = conf_ref[...]                       # (E, N)
+    alpha = ab_ref[:, 0:1]                     # (E, 1) broadcast over cameras
+    beta = ab_ref[:, 1:2]
+    routes = jnp.where(conf > alpha, 0,
+                       jnp.where(conf < beta, 1, 2)).astype(jnp.int32)
+    esc = routes == 2
+    pos = jnp.cumsum(esc.astype(jnp.int32), axis=1) - 1
+    slots = jnp.where(esc & (pos < capacity), pos, -1).astype(jnp.int32)
+    routes_ref[...] = routes
+    slots_ref[...] = slots
+    count_ref[...] = jnp.sum(esc.astype(jnp.int32), axis=1)
+
+
+def triage_fleet_pallas(conf: jax.Array, thresholds: jax.Array, *,
+                        capacity: int, interpret: bool = True):
+    """conf (E, N) f32, thresholds (E, 2) f32 [alpha, beta] per edge ->
+    (routes (E, N) i32, slots (E, N) i32, counts (E,) i32)."""
+    E, N = conf.shape
+    kernel = functools.partial(_triage_fleet_kernel, capacity=capacity)
+    return pl.pallas_call(
+        kernel,
+        in_specs=[pl.BlockSpec((E, N), lambda: (0, 0)),
+                  pl.BlockSpec((E, 2), lambda: (0, 0))],
+        out_specs=(pl.BlockSpec((E, N), lambda: (0, 0)),
+                   pl.BlockSpec((E, N), lambda: (0, 0)),
+                   pl.BlockSpec((E,), lambda: (0,))),
+        out_shape=(jax.ShapeDtypeStruct((E, N), jnp.int32),
+                   jax.ShapeDtypeStruct((E, N), jnp.int32),
+                   jax.ShapeDtypeStruct((E,), jnp.int32)),
         interpret=interpret,
     )(conf, thresholds)

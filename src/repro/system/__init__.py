@@ -1,10 +1,14 @@
 """End-to-end multi-camera cloud-edge query system (the paper, composed).
 
-``run_query(scenario)`` wires camera streams -> per-edge batched Pallas
-triage -> Eq. 7 allocator -> per-node queues -> metrics.  Scenario presets
-cover the paper's three settings (Tables II-IV) plus beyond-paper stress
-(bursty crowds, straggler/failing edge).
+``run_query(scenario)`` wires a ``Frontend`` detection stream -> ONE fused
+fleet-triage Pallas launch per tick (per-edge adaptive thresholds) -> Eq. 7
+allocator -> per-node queues -> metrics.  Scenario presets cover the
+paper's three settings (Tables II-IV) plus beyond-paper stress (bursty
+crowds, straggler/failing edge, the 64-edge/512-camera ``city_scale``
+fleet).  The engine is layered: ``events`` / ``transport`` / ``nodes`` /
+``triage`` / ``frontend`` behind a slim ``pipeline`` orchestrator.
 """
+from repro.system.frontend import ConfidenceStreamFrontend, Frontend
 from repro.system.metrics import QueryReport
 from repro.system.pipeline import QueryPipeline, run_query
 from repro.system.scenario import (
@@ -12,6 +16,7 @@ from repro.system.scenario import (
     SCHEMES,
     Scenario,
     bursty_crowds,
+    city_scale,
     heterogeneous_multi_edge,
     homogeneous_multi_edge,
     single_edge,
@@ -20,12 +25,15 @@ from repro.system.scenario import (
 )
 
 __all__ = [
+    "ConfidenceStreamFrontend",
+    "Frontend",
     "QueryPipeline",
     "QueryReport",
     "SCENARIOS",
     "SCHEMES",
     "Scenario",
     "bursty_crowds",
+    "city_scale",
     "heterogeneous_multi_edge",
     "homogeneous_multi_edge",
     "run_query",

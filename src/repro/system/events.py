@@ -1,0 +1,86 @@
+"""Typed simulation events + the time-ordered event queue.
+
+The pipeline's event loop is a plain priority queue over ``(time, seq,
+event)`` triples; ``seq`` breaks time ties in push order, which the
+orchestrator relies on (per-tick arrival batches are pushed before the
+tick's queue-length sample, failures after both).  Events are small frozen
+dataclasses so each handler dispatches on type, not on string tags.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Optional, Tuple
+
+from repro.serving.simulator import Item
+
+
+@dataclasses.dataclass
+class Task:
+    """One item travelling through the pipeline."""
+    item: Item
+    phase: str                    # 'classify' (CQ) or 'reclassify' (accurate)
+    decision: Optional[bool]      # set for classify tasks at triage time
+    tx_s: float = 0.0             # transfer time to attribute to the node
+
+
+@dataclasses.dataclass(frozen=True)
+class Sample:
+    """Per-tick queue-length sampling point."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Arrive:
+    """One item entering the system directly (cloud_only streams per item)."""
+    item: Item
+
+
+@dataclasses.dataclass(frozen=True)
+class TickArrivals:
+    """All of one scheduler tick's detections, grouped by home edge.
+
+    The cascade schemes consume this as ONE fused fleet-triage launch."""
+    batches: Dict[int, List[Item]]
+
+
+@dataclasses.dataclass(frozen=True)
+class Transfer:
+    """A task finishing its WAN/LAN transfer and landing on ``node``."""
+    node: int
+    task: Task
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeFail:
+    """Edge ``node`` dies at this instant."""
+    node: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceDone:
+    """``node`` finishes serving ``task`` after ``service_s`` seconds."""
+    node: int
+    task: Task
+    service_s: float
+
+
+class EventQueue:
+    """Min-heap of timestamped events with stable FIFO tie-breaking."""
+
+    def __init__(self) -> None:
+        self._pq: List[Tuple[float, int, object]] = []
+        self._seq = 0
+
+    def push(self, t: float, event: object) -> None:
+        self._seq += 1
+        heapq.heappush(self._pq, (t, self._seq, event))
+
+    def pop(self) -> Tuple[float, object]:
+        t, _, event = heapq.heappop(self._pq)
+        return t, event
+
+    def __bool__(self) -> bool:
+        return bool(self._pq)
+
+    def __len__(self) -> int:
+        return len(self._pq)

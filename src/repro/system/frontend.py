@@ -1,0 +1,46 @@
+"""Frontend seam: how detections enter the query pipeline.
+
+A ``Frontend`` turns a scenario into the per-item detection stream the
+event loop consumes.  Today there is one implementation — the
+confidence-stream frontend, which either synthesizes a model-free stream
+from the scenario's camera fleet or re-homes an injected pre-scored stream
+(the CQ-model-scored benchmark workload) onto the scenario's topology.
+
+The seam exists so the pixel path can slot in next: a CNN frontend that
+runs frame differencing + morphology + the CQ classifier over rendered
+frames (``repro.detection``) plugs in here without touching the engine.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import List, Optional, Sequence
+
+from repro.serving.simulator import Item
+from repro.system.scenario import Scenario, synthetic_confidence_stream
+
+
+class Frontend(abc.ABC):
+    """Produces the detection stream one scenario's run consumes."""
+
+    @abc.abstractmethod
+    def stream(self, sc: Scenario) -> List[Item]:
+        """Items sorted by arrival time, homed onto ``sc``'s edges."""
+
+
+class ConfidenceStreamFrontend(Frontend):
+    """Pre-scored confidences: injected items, or a synthetic model-free
+    stream (class-conditional Beta confidences) from the camera fleet."""
+
+    def __init__(self, items: Optional[Sequence[Item]] = None):
+        self._items = items
+
+    def stream(self, sc: Scenario) -> List[Item]:
+        if self._items is None:
+            return synthetic_confidence_stream(sc)
+        E = sc.num_edges
+        stream = [dataclasses.replace(
+            it, edge_device=(it.edge_device - 1) % E + 1)
+            for it in self._items]
+        stream.sort(key=lambda it: it.t_arrival)
+        return stream

@@ -2,14 +2,15 @@
 
 ``QueryReport`` is the harness's single result object: per-item latencies and
 decisions against ground truth, bandwidth split into WAN (edge->cloud upload)
-and LAN (edge->edge re-dispatch), per-tick queue-length timelines, and the
-count of batched triage kernel launches (exactly one per edge per tick on the
-cascade schemes — asserted by the smoke tests).
+and LAN (edge->edge re-dispatch), per-tick queue-length timelines, the count
+of fused fleet-triage kernel launches (exactly ONE per tick-with-arrivals on
+the cascade schemes, regardless of fleet size — asserted by the smoke tests),
+and each edge's final adaptive (alpha, beta).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import Dict, List, Tuple
 
 import numpy as np
 
@@ -33,6 +34,10 @@ class QueryReport:
     queue_timeline: Dict[int, np.ndarray]  # node -> (ticks,) queue length
     per_node_busy: Dict[int, float]        # node -> total service seconds
     per_node_served: Dict[int, int]        # node -> items serviced
+    # edge -> final (alpha, beta): per-edge Eqs. 8-9 state at end of run
+    # (empty for the non-cascade schemes)
+    thresholds: Dict[int, Tuple[float, float]] = \
+        dataclasses.field(default_factory=dict)
 
     # --- accuracy -------------------------------------------------------------
     def f_score(self, lam: float = 2.0) -> float:
@@ -67,6 +72,8 @@ class QueryReport:
             "rerouted": self.rerouted,
             "kernel_launches": self.kernel_launches,
             "ticks": self.ticks,
+            "launches_per_tick": round(
+                self.kernel_launches / max(self.ticks, 1), 3),
         }
 
 

@@ -1,57 +1,85 @@
-"""End-to-end multi-camera cloud-edge query pipeline (the paper's system).
+"""Slim orchestrator for the end-to-end cloud-edge query engine.
 
-Tick-driven, event-accurate harness composing every SurveilEdge piece:
+The engine is layered; this module only composes the layers and runs the
+event loop:
 
-  camera streams         repro.data.synthetic_video arrivals (or a pre-scored
-        |                workload from repro.serving.workload)
-  per-edge batched       ONE ``triage_batched`` Pallas launch per edge per
-  cascade triage         tick over all of that edge's camera detections,
-        |                with the *current* Eqs. 8-9 thresholds as runtime
-        |                inputs (no retrace as they adapt)
-  Eq. 7 allocator        escalations routed to argmin_j Q_j * t_j across the
-        |                cloud and every live edge (repro.core.scheduler)
-  per-node queues        FIFO service with calibrated latency profiles: edge
-        |                CQ model vs cloud model vs heavyweight re-classify,
-        |                WAN uplink as a shared FIFO, LAN edge-to-edge links
-  metrics                per-query latency / F2 accuracy / bandwidth + queue
-                         timelines (repro.system.metrics.QueryReport)
+  frontend   repro.system.frontend   detection stream (confidence-based
+                                     today; the pixel/CNN path slots in
+                                     behind the same ``Frontend`` seam)
+  events     repro.system.events     typed events + time-ordered queue
+  triage     repro.system.triage     per-edge Eqs. 8-9 thresholds + ONE
+                                     fused fleet-triage Pallas launch per
+                                     scheduler tick (``ops.triage_fleet``)
+  allocator  repro.core.scheduler    Eq. 7: argmin_j Q_j * t_j (+ WAN
+                                     backlog for the cloud), node liveness
+  nodes      repro.system.nodes      per-node deque queues, service state,
+                                     failure bookkeeping
+  transport  repro.system.transport  shared-FIFO WAN uplink + dedicated
+                                     LAN links, byte accounting
+  metrics    repro.system.metrics    QueryReport
 
-Thresholds adapt online: every enqueue/complete refreshes Eqs. 8-9 through
-the scheduler exactly as the in-process parameter bus replicates them.
-Beyond-paper stress is first-class: scenarios may declare traffic bursts and
-mid-run edge failures (queued work is re-dispatched, the dead edge's cameras
-re-home to surviving nodes via Eq. 7).
-
-Entry point: ``run_query(scenario) -> QueryReport``.
+Beyond-paper stress is first-class: scenarios may declare traffic bursts
+and mid-run edge failures (queued work is re-dispatched, the dead edge's
+cameras re-home to survivors via Eq. 7).  Entry point unchanged:
+``run_query(scenario) -> QueryReport``.
 """
 from __future__ import annotations
 
-import dataclasses
-import heapq
 import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.scheduler import CLOUD, Scheduler
-from repro.core.thresholds import ThresholdState
-from repro.kernels import ops
-from repro.serving.bus import Bus, FifoLink, ParamDB
+from repro.serving.bus import Bus, ParamDB
 from repro.serving.simulator import Item
 from repro.system import metrics as MX
-from repro.system.scenario import Scenario, synthetic_confidence_stream
+from repro.system.events import (
+    Arrive,
+    EdgeFail,
+    EventQueue,
+    Sample,
+    ServiceDone,
+    Task,
+    TickArrivals,
+    Transfer,
+)
+from repro.system.frontend import ConfidenceStreamFrontend, Frontend
+from repro.system.nodes import NodeBank
+from repro.system.scenario import Scenario
+from repro.system.transport import Transport
+from repro.system.triage import ACCEPT, ESCALATE, TriageStage
 
-# route codes emitted by the triage kernel
-ACCEPT, REJECT, ESCALATE = 0, 1, 2
 
+def group_arrivals(items: Sequence[Item], interval_s: float
+                   ) -> List[Tuple[int, Dict[int, List[Item]]]]:
+    """Group a stream into per-tick, per-edge batches with numpy.
 
-@dataclasses.dataclass
-class _Task:
-    """One item travelling through the pipeline."""
-    item: Item
-    phase: str                    # 'classify' (CQ) or 'reclassify' (accurate)
-    decision: Optional[bool]      # set for classify tasks at triage time
-    tx_s: float = 0.0             # transfer time to attribute to the node
+    Returns ``[(tick_index, {edge: [items]}), ...]`` in tick order; within
+    each (tick, edge) group arrival order is preserved (stable lexsort over
+    an already arrival-sorted stream).  The grouping work is O(n) numpy —
+    no per-item Python dict churn, which matters at city scale."""
+    if not items:
+        return []
+    n = len(items)
+    arr = np.empty(n, object)
+    arr[:] = list(items)
+    t = np.fromiter((it.t_arrival for it in items), np.float64, n)
+    e = np.fromiter((it.edge_device for it in items), np.int64, n)
+    ticks = (t // interval_s).astype(np.int64)
+    order = np.lexsort((e, ticks))
+    arr, ticks, e = arr[order], ticks[order], e[order]
+    out: List[Tuple[int, Dict[int, List[Item]]]] = []
+    tick_cuts = np.flatnonzero(np.diff(ticks)) + 1
+    for s0, s1 in zip(np.r_[0, tick_cuts], np.r_[tick_cuts, n]):
+        seg_e = e[s0:s1]
+        edge_cuts = np.flatnonzero(np.diff(seg_e)) + 1
+        batches = {
+            int(seg_e[b0]): list(arr[s0 + b0:s0 + b1])
+            for b0, b1 in zip(np.r_[0, edge_cuts],
+                              np.r_[edge_cuts, s1 - s0])}
+        out.append((int(ticks[s0]), batches))
+    return out
 
 
 class QueryPipeline:
@@ -70,19 +98,6 @@ class QueryPipeline:
                 raise ValueError(
                     f"scenario {sc.name!r}: failure at t={t_fail} references "
                     f"node {nid}, but failable edges are {list(sc.edge_ids)}")
-        # the pipeline owns the cascade thresholds: Eqs. 8-9 are driven once
-        # per edge-batch by the drain of the node Eq. 7 would hand an
-        # escalation to (incl. WAN backlog), with slow idle-widening —
-        # not by every parameter write as the per-write refresh inside
-        # Scheduler does (that oscillates between idle edges and the
-        # loaded cloud path).  The scheduler keeps its own default
-        # ThresholdState, which this pipeline never reads.
-        if sc.scheme == "surveiledge_fixed":
-            a, b = sc.fixed_thresholds or (0.8, 0.1)
-            self.th = ThresholdState(alpha=a, beta=b, gamma1=0.0,
-                                     gamma2=b / max(1.0 - a, 1e-6))
-        else:
-            self.th = ThresholdState(gamma1_up=0.005)
         self.sched = Scheduler(sorted(self.service_s),
                                interval_s=sc.interval_s)
         self.bus = Bus()
@@ -92,53 +107,26 @@ class QueryPipeline:
             self.db.put(f"Q{nid}", 0)
             self.sched.nodes[nid].estimator.t = svc
 
-    # --- stochastic service / links ------------------------------------------
-    def _service_time(self, node: int, phase: str) -> float:
-        base = self.service_s[node]
-        if phase == "reclassify" and node != CLOUD:
-            base *= self.sc.reclassify_factor
-        return float(base * self.rng.lognormal(0.0, 0.15))
-
-    def _wan_done(self, t: float, nbytes: int) -> float:
-        """Shared WAN uplink: FIFO — concurrent uploads serialize."""
-        return self._uplink.send(t, nbytes)
-
-    def _lan_done(self, t: float, nbytes: int) -> float:
-        """Edge-to-edge link: dedicated, non-contending."""
-        return t + nbytes / (self.sc.lan_MBps * 1e6) + self.sc.rtt_s
-
-    def _uplink_backlog(self, t: float) -> float:
-        """Seconds of queued WAN transfers ahead of a new upload."""
-        return self._uplink.backlog(t)
-
     # --- event machinery ------------------------------------------------------
-    def _push(self, t: float, kind: str, payload) -> None:
-        self._seq += 1
-        heapq.heappush(self._pq, (t, self._seq, kind, payload))
-
-    def _enqueue(self, t: float, node: int, task: _Task) -> None:
-        self._queues[node].append(task)
+    def _enqueue(self, t: float, node: int, task: Task) -> None:
+        self.nodes.push(node, task)
         self.sched.on_enqueue(node)
         self.db.put(f"Q{node}", self.sched.nodes[node].queue_len)
-        if not self._busy[node]:
+        if not self.nodes.busy[node]:
             self._start_service(t, node)
 
     def _start_service(self, t: float, node: int) -> None:
-        task = self._queues[node].pop(0)
-        self._busy[node] = True
-        svc = self._service_time(node, task.phase)
-        self._inflight[node] = (task, svc, t)
-        self._busy_s[node] += svc
-        self._push(t + svc, "done", (node, task, svc))
+        task, svc = self.nodes.begin(t, node)
+        self.events.push(t + svc, ServiceDone(node, task, svc))
 
     def _finish(self, t: float, node: int, it: Item, decision: bool) -> None:
         self._lat.append(t - it.t_arrival)
         self._dec.append(decision)
         self._tru.append(it.is_query)
         self._fin.append(t)
-        self._served[node] += 1
+        self.nodes.served[node] += 1
 
-    def _dispatch(self, t: float, src: int, task: _Task,
+    def _dispatch(self, t: float, src: int, task: Task,
                   count_escalated: bool, exclude_src: bool = False) -> None:
         """Route one re-classification task via Eq. 7 and ship it.
 
@@ -155,97 +143,85 @@ class QueryPipeline:
                 target = self.sched.select_node(
                     exclude_cloud=self.sc.scheme == "edge_only",
                     exclude={src} if exclude_src else (),
-                    extra_cost={CLOUD: self._uplink_backlog(t)})
+                    extra_cost={CLOUD: self.transport.wan_backlog(t)})
             except ValueError:
                 target = CLOUD      # the cloud never fails in our scenarios
         if count_escalated:
             self._escalated += 1
         nbytes = task.item.nbytes
         if target == src:
-            self._push(t, "xfer", (target, task))
+            self.events.push(t, Transfer(target, task))
         elif target == CLOUD:
-            self._uploaded += nbytes
-            done = self._wan_done(t, nbytes)
+            done = self.transport.wan_send(t, nbytes)
             task.tx_s += done - t
-            self._push(done, "xfer", (target, task))
+            self.events.push(done, Transfer(target, task))
         else:
-            self._lan_bytes += nbytes
-            done = self._lan_done(t, nbytes)
+            done = self.transport.lan_send(t, nbytes)
             task.tx_s += done - t
-            self._push(done, "xfer", (target, task))
+            self.events.push(done, Transfer(target, task))
 
-    # --- per-tick batched triage ---------------------------------------------
-    def _refresh_thresholds(self, t: float, edge: int) -> None:
-        """Eqs. 8-9 driven by the drain of "the chosen queue": the busiest
-        of this edge's own queue (where classification tasks land) and the
-        node Eq. 7 would hand an escalation to (incl. WAN backlog)."""
-        if self.sc.scheme != "surveiledge":
-            return
-        try:
-            d = self.sched.select_node(
-                extra_cost={CLOUD: self._uplink_backlog(t)})
-        except ValueError:
-            d = CLOUD
-        esc_drain = self.sched.nodes[d].drain_time
-        if d == CLOUD:
-            esc_drain += self._uplink_backlog(t)
-        drain = max(self.sched.nodes[edge].drain_time, esc_drain)
-        self.th = self.th.update(drain, 1.0, self.sc.interval_s)
-        self.db.put("alpha", self.th.alpha)
-        self.db.put("beta", self.th.beta)
-
-    def _triage_batch(self, t: float, edge: int, batch: List[Item]) -> None:
-        self._refresh_thresholds(t, edge)
-        th = self.th
-        conf = np.asarray([it.conf for it in batch], np.float32)
-        routes, slots, _ = ops.triage_batched(
-            conf, alpha=th.alpha, beta=th.beta,
-            capacity=self.sc.escalation_capacity)
-        self._launches += 1
-        routes, slots = np.asarray(routes), np.asarray(slots)
-        if (self.sc.scheme == "surveiledge"
-                and self.sched.nodes[edge].drain_time
-                > self.sc.offload_drain_s):
-            # the home edge can't drain its queue within the gate: the Eq. 7
-            # allocator sheds this tick's raw batch across cloud/edges (the
-            # overloaded home has maximal Q*t, so it is effectively skipped)
-            for it in batch:
-                self._rerouted += 1
-                self._dispatch(t, edge, _Task(it, "reclassify", None),
-                               count_escalated=False, exclude_src=True)
-            return
-        for it, route, slot in zip(batch, routes, slots):
-            if route == ESCALATE and slot >= 0:
-                decision = None                     # cloud-model's call
-            elif route == ESCALATE:                 # capacity overflow:
-                decision = it.conf > 0.5            # stays un-escalated
+    # --- per-tick fused triage ------------------------------------------------
+    def _on_tick(self, t: float, batches: Dict[int, List[Item]]) -> None:
+        """One scheduler tick's arrivals: failover dead edges' batches, shed
+        overloaded edges' raw batches via Eq. 7, triage everything else in
+        ONE fused fleet launch, enqueue per-route."""
+        live: Dict[int, List[Item]] = {}
+        for edge, batch in batches.items():
+            if edge in self.nodes.dead:
+                # dead edge's cameras re-home: raw frames to survivors
+                for it in batch:
+                    self._rerouted += 1
+                    self._dispatch(t, edge, self._failover_task(it),
+                                   count_escalated=False)
             else:
-                decision = route == ACCEPT
-            self._enqueue(t, edge, _Task(it, "classify", decision))
+                live[edge] = batch
+        if not live:
+            return
+        if self.sc.scheme == "edge_only":
+            for edge, batch in live.items():
+                for it in batch:
+                    self._enqueue(t, edge, Task(it, "classify",
+                                                it.conf > 0.5))
+            return
+        self.triage_stage.refresh(t, sorted(live))
+        if self.sc.scheme == "surveiledge":
+            for e in live:
+                self.db.put(f"alpha{e}", self.triage_stage.states[e].alpha)
+                self.db.put(f"beta{e}", self.triage_stage.states[e].beta)
+            # a home edge that can't drain its queue within the gate sheds
+            # this tick's raw batch across cloud/edges via Eq. 7 (the
+            # overloaded home has maximal Q*t, so it is effectively skipped)
+            for edge in [e for e in live
+                         if self.sched.nodes[e].drain_time
+                         > self.sc.offload_drain_s]:
+                for it in live.pop(edge):
+                    self._rerouted += 1
+                    self._dispatch(t, edge, Task(it, "reclassify", None),
+                                   count_escalated=False, exclude_src=True)
+        for edge, (routes, slots) in self.triage_stage.triage_tick(
+                live).items():
+            for it, route, slot in zip(live[edge], routes, slots):
+                if route == ESCALATE and slot >= 0:
+                    decision = None                 # cloud-model's call
+                elif route == ESCALATE:             # capacity overflow:
+                    decision = it.conf > 0.5        # stays un-escalated
+                else:
+                    decision = route == ACCEPT
+                self._enqueue(t, edge, Task(it, "classify", decision))
 
-    def _failover_task(self, it: Item) -> _Task:
+    def _failover_task(self, it: Item) -> Task:
         """A dead edge's work re-homed to a survivor: under edge_only the
         peer re-runs the CQ model (conf > 0.5); otherwise the heavyweight
         re-classifier answers."""
         if self.sc.scheme == "edge_only":
-            return _Task(it, "classify", it.conf > 0.5)
-        return _Task(it, "reclassify", None)
+            return Task(it, "classify", it.conf > 0.5)
+        return Task(it, "reclassify", None)
 
     def _fail_node(self, t: float, node: int) -> None:
         """Edge death: drop it from Eq. 7, re-dispatch its queued and
         in-flight work to survivors."""
-        self._dead.add(node)
         self.sched.mark_down(node)
-        stranded = list(self._queues[node])
-        self._queues[node].clear()
-        if self._inflight[node] is not None:
-            task, svc, started = self._inflight[node]
-            stranded.insert(0, task)
-            self._inflight[node] = None
-            # aborted mid-service: the node did work from `started` until
-            # the failure; only the unserved remainder is not busy time
-            self._busy_s[node] -= max(0.0, svc - (t - started))
-        self._busy[node] = False
+        stranded = self.nodes.fail(t, node)
         self.sched.nodes[node].queue_len = 0
         self.db.put(f"Q{node}", 0)
         for task in stranded:
@@ -253,108 +229,83 @@ class QueryPipeline:
             self._dispatch(t, node, self._failover_task(task.item),
                            count_escalated=False)
 
+    def _on_done(self, t: float, node: int, task: Task, svc: float) -> None:
+        if node in self.nodes.dead:
+            return                               # work was re-dispatched
+        self.nodes.complete(node)
+        self.sched.on_complete(node, svc + task.tx_s)
+        self.db.put(f"t{node}", self.sched.nodes[node].estimator.t)
+        self.db.put(f"Q{node}", self.sched.nodes[node].queue_len)
+        if task.phase == "reclassify":
+            # accurate model == ground truth (paper: ResNet-152)
+            self._finish(t, node, task.item, task.item.is_query)
+        elif task.decision is None:              # escalate: ship onward
+            self._dispatch(t, node, Task(task.item, "reclassify", None),
+                           count_escalated=True)
+        else:
+            self._finish(t, node, task.item, task.decision)
+        if self.nodes.queues[node]:
+            self._start_service(t, node)
+
     # --- main loop ------------------------------------------------------------
     def run(self, items: Sequence[Item]) -> MX.QueryReport:
         sc = self.sc
-        cascade = sc.scheme in ("surveiledge", "surveiledge_fixed")
-        self._pq: List = []
-        self._seq = 0
-        self._uplink = FifoLink(sc.uplink_MBps, sc.rtt_s)
-        self._queues: Dict[int, List[_Task]] = {n: [] for n in self.service_s}
-        self._busy: Dict[int, bool] = {n: False for n in self.service_s}
-        self._inflight: Dict[int, Optional[Tuple[_Task, float, float]]] = {
-            n: None for n in self.service_s}
-        self._busy_s: Dict[int, float] = {n: 0.0 for n in self.service_s}
-        self._served: Dict[int, int] = {n: 0 for n in self.service_s}
-        self._dead: set = set()
+        self.events = EventQueue()
+        self.transport = Transport(sc)
+        self.nodes = NodeBank(sc, self.service_s, self.rng)
+        self.triage_stage = TriageStage(sc, self.sched, self.transport)
         self._lat: List[float] = []
         self._dec: List[bool] = []
         self._tru: List[bool] = []
         self._fin: List[float] = []
-        self._uploaded = 0
-        self._lan_bytes = 0
         self._escalated = 0
         self._rerouted = 0
-        self._launches = 0
         tick_samples: List[Dict[int, int]] = []
 
         # arrivals: cloud_only streams per item; the cascade/edge_only paths
-        # batch each tick's detections per home edge (one triage launch each)
+        # batch each tick's detections into ONE TickArrivals event (the
+        # cascade schemes triage it with a single fused fleet launch)
         last_t = max((it.t_arrival for it in items), default=0.0)
         n_ticks = max(1, int(math.ceil(
             max(sc.duration_s, last_t + 1e-9) / sc.interval_s)))
         if sc.scheme == "cloud_only":
             for it in items:
-                self._push(it.t_arrival, "arrive", it)
+                self.events.push(it.t_arrival, Arrive(it))
         else:
-            groups: Dict[Tuple[int, int], List[Item]] = {}
-            for it in items:
-                k = int(it.t_arrival // sc.interval_s)
-                groups.setdefault((k, it.edge_device), []).append(it)
-            for (k, edge), batch in sorted(groups.items()):
-                self._push((k + 1) * sc.interval_s, "batch", (edge, batch))
+            for k, batches in group_arrivals(items, sc.interval_s):
+                self.events.push((k + 1) * sc.interval_s,
+                                 TickArrivals(batches))
         for k in range(1, n_ticks + 1):
-            self._push(k * sc.interval_s, "sample", None)
+            self.events.push(k * sc.interval_s, Sample())
         for t_fail, node in sc.failures:
-            self._push(t_fail, "fail", node)
+            self.events.push(t_fail, EdgeFail(node))
 
-        while self._pq:
-            t, _, kind, payload = heapq.heappop(self._pq)
-            if kind == "sample":
+        while self.events:
+            t, ev = self.events.pop()
+            if isinstance(ev, Sample):
                 tick_samples.append({
-                    n: len(self._queues[n]) + int(self._busy[n])
-                    for n in self.service_s})
-            elif kind == "arrive":               # cloud_only
-                it = payload
-                self._uploaded += it.nbytes
-                task = _Task(it, "reclassify", None)
-                done = self._wan_done(t, it.nbytes)
+                    n: self.nodes.occupancy(n) for n in self.service_s})
+            elif isinstance(ev, Arrive):         # cloud_only
+                it = ev.item
+                task = Task(it, "reclassify", None)
+                done = self.transport.wan_send(t, it.nbytes)
                 task.tx_s = done - t
-                self._push(done, "xfer", (CLOUD, task))
-            elif kind == "batch":
-                edge, batch = payload
-                if edge in self._dead:
-                    # dead edge's cameras re-home: raw frames to survivors
-                    for it in batch:
-                        self._rerouted += 1
-                        self._dispatch(t, edge, self._failover_task(it),
-                                       count_escalated=False)
-                elif cascade:
-                    self._triage_batch(t, edge, batch)
-                else:                            # edge_only
-                    for it in batch:
-                        self._enqueue(t, edge, _Task(it, "classify",
-                                                     it.conf > 0.5))
-            elif kind == "xfer":
-                node, task = payload
-                if node in self._dead:           # died while in transit
+                self.events.push(done, Transfer(CLOUD, task))
+            elif isinstance(ev, TickArrivals):
+                self._on_tick(t, ev.batches)
+            elif isinstance(ev, Transfer):
+                if ev.node in self.nodes.dead:   # died while in transit
                     self._rerouted += 1
-                    self._dispatch(t, node, task, count_escalated=False)
+                    self._dispatch(t, ev.node, ev.task,
+                                   count_escalated=False)
                 else:
-                    self._enqueue(t, node, task)
-            elif kind == "fail":
-                if payload not in self._dead:
-                    self._fail_node(t, payload)
-            elif kind == "done":
-                node, task, svc = payload
-                if node in self._dead:
-                    continue                     # work was re-dispatched
-                self._busy[node] = False
-                self._inflight[node] = None
-                self.sched.on_complete(node, svc + task.tx_s)
-                self.db.put(f"t{node}", self.sched.nodes[node].estimator.t)
-                self.db.put(f"Q{node}", self.sched.nodes[node].queue_len)
-                if task.phase == "reclassify":
-                    # accurate model == ground truth (paper: ResNet-152)
-                    self._finish(t, node, task.item, task.item.is_query)
-                elif task.decision is None:      # escalate: ship onward
-                    self._dispatch(t, node,
-                                   _Task(task.item, "reclassify", None),
-                                   count_escalated=True)
-                else:
-                    self._finish(t, node, task.item, task.decision)
-                if self._queues[node]:
-                    self._start_service(t, node)
+                    self._enqueue(t, ev.node, ev.task)
+            elif isinstance(ev, EdgeFail):
+                if ev.node not in self.nodes.dead:
+                    self._fail_node(t, ev.node)
+            else:
+                assert isinstance(ev, ServiceDone), ev
+                self._on_done(t, ev.node, ev.task, ev.service_s)
 
         return MX.QueryReport(
             scenario=sc.name,
@@ -363,33 +314,36 @@ class QueryPipeline:
             decisions=np.asarray(self._dec, bool),
             truths=np.asarray(self._tru, bool),
             finish_times=np.asarray(self._fin),
-            uploaded_bytes=self._uploaded,
-            lan_bytes=self._lan_bytes,
+            uploaded_bytes=self.transport.uploaded_bytes,
+            lan_bytes=self.transport.lan_bytes,
             escalated=self._escalated,
             rerouted=self._rerouted,
-            kernel_launches=self._launches,
+            kernel_launches=self.triage_stage.launches,
             ticks=n_ticks,
             queue_timeline=MX.merge_timelines(tick_samples),
-            per_node_busy=dict(self._busy_s),
-            per_node_served=dict(self._served),
+            per_node_busy=dict(self.nodes.busy_s),
+            per_node_served=dict(self.nodes.served),
+            thresholds=self.triage_stage.final_thresholds()
+            if sc.scheme in ("surveiledge", "surveiledge_fixed") else {},
         )
 
 
 def run_query(scenario: Scenario,
-              items: Optional[Sequence[Item]] = None) -> MX.QueryReport:
+              items: Optional[Sequence[Item]] = None,
+              frontend: Optional[Frontend] = None) -> MX.QueryReport:
     """Run one query scenario end to end and return its ``QueryReport``.
 
-    ``items`` (or ``scenario.items``) injects a pre-scored detection stream
-    — e.g. the CQ-model-scored benchmark workload; camera->edge homes are
-    remapped onto this scenario's topology.  Otherwise a model-free stream
-    is synthesized from the scenario's camera fleet.
+    The detection stream comes from ``frontend`` (any ``Frontend``
+    implementation); by default a ``ConfidenceStreamFrontend`` over
+    ``items`` (or ``scenario.items``) — a pre-scored stream, e.g. the
+    CQ-model-scored benchmark workload, re-homed onto this scenario's
+    topology — or, when no items are given, a model-free synthetic stream
+    from the scenario's camera fleet.
     """
-    stream = items if items is not None else scenario.items
-    if stream is None:
-        stream = synthetic_confidence_stream(scenario)
-    else:
-        E = scenario.num_edges
-        stream = [dataclasses.replace(
-            it, edge_device=(it.edge_device - 1) % E + 1) for it in stream]
-        stream.sort(key=lambda it: it.t_arrival)
-    return QueryPipeline(scenario).run(stream)
+    if frontend is not None and items is not None:
+        raise ValueError("pass either items= or frontend=, not both "
+                         "(a custom frontend produces its own stream)")
+    if frontend is None:
+        frontend = ConfidenceStreamFrontend(
+            items if items is not None else scenario.items)
+    return QueryPipeline(scenario).run(frontend.stream(scenario))

@@ -72,7 +72,12 @@ def synthetic_confidence_stream(sc: Scenario) -> List[Item]:
     """Model-free item stream: Poisson arrivals from the procedural camera
     fleet, edge confidence drawn from class-conditional Beta distributions
     (query objects ~ Beta(8,2), others ~ Beta(2,8)) — overlapping enough
-    that the [beta, alpha] escalation band carries real mass."""
+    that the [beta, alpha] escalation band carries real mass.
+
+    All random draws are vectorized (one Poisson matrix over ticks x
+    cameras, then per-camera class/confidence/jitter vectors), so setup
+    cost stays sub-linear in Python overhead per item — city-scale fleets
+    (hundreds of cameras) synthesize in milliseconds."""
     rng = np.random.default_rng(sc.seed)
     cams = SV.make_cameras(sc.num_cameras, seed=sc.seed)
     if sc.burst_boost is not None or sc.burst_rate is not None:
@@ -82,19 +87,29 @@ def synthetic_confidence_stream(sc: Scenario) -> List[Item]:
             else c.busy_boost,
             base_rate=sc.burst_rate if sc.burst_rate is not None
             else c.base_rate) for c in cams]
+    ts = np.arange(0.0, sc.duration_s, sc.interval_s)              # (T,)
+    period = np.asarray([c.busy_period_s for c in cams])           # (C,)
+    phase = 2 * np.pi * ts[:, None] / period[None, :] \
+        + np.asarray([c.busy_phase for c in cams])[None, :]
+    rates = np.asarray([c.base_rate for c in cams]) * (
+        1.0 + np.asarray([c.busy_boost for c in cams])
+        * np.maximum(0.0, np.sin(phase)) ** 2)                     # (T, C)
+    counts = rng.poisson(rates * sc.interval_s)                    # (T, C)
     items: List[Item] = []
-    for t in np.arange(0.0, sc.duration_s, sc.interval_s):
-        for cam in cams:
-            n = rng.poisson(cam.rate_at(float(t)) * sc.interval_s)
-            for _ in range(int(n)):
-                cls = int(rng.choice(SV.NUM_CLASSES, p=cam.class_mix))
-                is_query = cls == SV.QUERY_CLASS
-                conf = float(rng.beta(8, 2) if is_query else rng.beta(2, 8))
-                items.append(Item(
-                    t_arrival=float(t + rng.uniform(0, sc.interval_s)),
-                    camera=cam.cam_id,
-                    edge_device=cam.cam_id % sc.num_edges + 1,
-                    conf=conf, is_query=is_query))
+    for j, cam in enumerate(cams):
+        n = int(counts[:, j].sum())
+        if n == 0:
+            continue
+        cls = rng.choice(SV.NUM_CLASSES, size=n, p=cam.class_mix)
+        is_query = cls == SV.QUERY_CLASS
+        conf = np.where(is_query, rng.beta(8, 2, n), rng.beta(2, 8, n))
+        t_arr = np.repeat(ts, counts[:, j]) \
+            + rng.uniform(0, sc.interval_s, n)
+        edge = cam.cam_id % sc.num_edges + 1
+        items.extend(
+            Item(t_arrival=float(t), camera=cam.cam_id, edge_device=edge,
+                 conf=float(c), is_query=bool(q))
+            for t, c, q in zip(t_arr, conf, is_query))
     items.sort(key=lambda it: it.t_arrival)
     return items
 
@@ -137,10 +152,44 @@ def straggler_edge(**kw) -> Scenario:
                     failures=((duration * 2 / 3, 1),), **kw)
 
 
+def city_scale(num_cameras: int = 512, num_edges: int = 64,
+               num_failures: int = 6, **kw) -> Scenario:
+    """Fleet-scale operating point: >= 64 heterogeneous edges serving
+    >= 512 cameras, with *rolling* failures — a handful of distinct edges
+    dying one after another across the run, so Eq. 7 keeps re-routing and
+    camera fleets keep re-homing while the system stays under load.
+
+    The floors are pinned (a smaller request is bumped up): this scenario
+    exists to exercise the fused fleet-triage launch and the per-edge
+    threshold state at scale, not to shrink down.  Links and the cloud are
+    sized city-like — a fat shared uplink and a cloud cluster an order of
+    magnitude faster than the paper's single GPU."""
+    num_cameras = max(num_cameras, 512)
+    num_edges = max(num_edges, 64)
+    duration = kw.pop("duration_s", 60.0)
+    seed = kw.pop("seed", 0)
+    rng = np.random.default_rng(seed + 77)
+    # heterogeneous service speeds: mostly 1x/0.5x, some fast 0.25x racks
+    # and a tail of 2x-slow strugglers (service-time multipliers)
+    speeds = tuple(float(s) for s in rng.choice(
+        (0.25, 0.5, 1.0, 2.0), size=num_edges, p=(0.15, 0.3, 0.4, 0.15)))
+    fail_edges = rng.choice(np.arange(1, num_edges + 1),
+                            size=num_failures, replace=False)
+    failures = tuple(
+        (duration * (i + 1) / (num_failures + 1), int(e))
+        for i, e in enumerate(fail_edges))
+    return Scenario(name="city_scale", edge_speeds=speeds,
+                    num_cameras=num_cameras, duration_s=duration,
+                    seed=seed, failures=failures,
+                    uplink_MBps=8.0, lan_MBps=50.0, cloud_speedup=40.0,
+                    **kw)
+
+
 SCENARIOS: Dict[str, Callable[..., Scenario]] = {
     "single_edge": single_edge,
     "homogeneous_multi_edge": homogeneous_multi_edge,
     "heterogeneous_multi_edge": heterogeneous_multi_edge,
     "bursty_crowds": bursty_crowds,
     "straggler_edge": straggler_edge,
+    "city_scale": city_scale,
 }

@@ -1,0 +1,40 @@
+"""WAN/LAN transport layer for the query pipeline.
+
+Two link families, matching the paper's deployment: a *shared* WAN uplink
+(edge -> cloud) modelled as one FIFO — concurrent uploads serialize, which
+is what makes cloud-only saturate (Table II) — and dedicated edge-to-edge
+LAN links that never contend.  ``Transport`` owns both plus the byte
+counters the ``QueryReport`` bandwidth columns are built from.
+"""
+from __future__ import annotations
+
+from repro.serving.bus import FifoLink
+from repro.system.scenario import Scenario
+
+
+class Transport:
+    """The pipeline's only gateway onto the wire."""
+
+    def __init__(self, sc: Scenario):
+        self._uplink = FifoLink(sc.uplink_MBps, sc.rtt_s)
+        self._lan_MBps = sc.lan_MBps
+        self._rtt_s = sc.rtt_s
+        self.uploaded_bytes = 0     # shipped over the shared WAN uplink
+        self.lan_bytes = 0          # shipped edge-to-edge
+
+    def wan_send(self, t: float, nbytes: int) -> float:
+        """Start an upload at ``t``; returns delivery time (FIFO-serialized)."""
+        self.uploaded_bytes += nbytes
+        return self._uplink.send(t, nbytes)
+
+    def lan_send(self, t: float, nbytes: int) -> float:
+        """Edge-to-edge transfer: dedicated link, non-contending."""
+        self.lan_bytes += nbytes
+        return t + nbytes / (self._lan_MBps * 1e6) + self._rtt_s
+
+    def wan_backlog(self, t: float) -> float:
+        """Seconds of queued WAN transfers ahead of a new upload at ``t``.
+
+        Eq. 7 charges this to the cloud's cost (the paper folds transmission
+        latency into t_0), and Eqs. 8-9 fold it into the escalation drain."""
+        return self._uplink.backlog(t)

@@ -1,0 +1,105 @@
+"""Fleet cascade stage: per-edge Eqs. 8-9 state + one fused launch per tick.
+
+Every scheduler tick, all live edges' detection batches are packed into one
+(E, N) confidence matrix (rows right-padded with -1.0, which always routes
+to 'reject') alongside the (E, 2) matrix of each edge's *current* adaptive
+thresholds, and triaged by a single ``ops.triage_fleet`` Pallas launch —
+the per-tick kernel-launch count is 1, not E.
+
+Thresholds are per-edge state: each edge runs its own Eqs. 8-9 update,
+driven by the drain of "its chosen queue" — the busier of the edge's own
+queue (where classification tasks land) and the node Eq. 7 would hand an
+escalation to (including WAN backlog; computed once per tick, it is the
+same target for every edge).  A loaded edge therefore tightens its
+[beta, alpha] escalation bracket while an idle edge in the same fleet
+widens its own, independently.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Tuple
+
+import numpy as np
+
+from repro.core.scheduler import CLOUD, Scheduler
+from repro.core.thresholds import ThresholdState
+from repro.kernels import ops
+from repro.serving.simulator import Item
+from repro.system.scenario import Scenario
+from repro.system.transport import Transport
+
+# route codes emitted by the triage kernel
+ACCEPT, REJECT, ESCALATE = 0, 1, 2
+
+
+class TriageStage:
+    """Per-edge adaptive thresholds + the fused fleet-triage hot path."""
+
+    def __init__(self, sc: Scenario, sched: Scheduler, transport: Transport):
+        self.sc = sc
+        self.sched = sched
+        self.transport = transport
+        # Per-edge Eqs. 8-9 state (the paper runs the adaptation on every
+        # edge device; a single global (alpha, beta) would let one hot edge
+        # drag the whole fleet's bracket shut).  The fixed scheme freezes
+        # one shared pair instead.
+        if sc.scheme == "surveiledge_fixed":
+            a, b = sc.fixed_thresholds or (0.8, 0.1)
+            proto = ThresholdState(alpha=a, beta=b, gamma1=0.0,
+                                   gamma2=b / max(1.0 - a, 1e-6))
+        else:
+            proto = ThresholdState(gamma1_up=0.005)
+        self.states: Dict[int, ThresholdState] = {
+            e: proto for e in sc.edge_ids}
+        self.launches = 0
+
+    # --- Eqs. 8-9, once per edge per tick ------------------------------------
+    def refresh(self, t: float, edges: Iterable[int]) -> None:
+        """Advance each listed edge's (alpha, beta) by one Eqs. 8-9 step.
+
+        The escalation-target drain (argmin Eq. 7 cost, incl. WAN backlog
+        for the cloud) is fleet-global and computed once; each edge then
+        maxes it against its *own* queue drain, so per-edge load asymmetry
+        shows up as threshold divergence."""
+        if self.sc.scheme != "surveiledge":
+            return
+        try:
+            d = self.sched.select_node(
+                extra_cost={CLOUD: self.transport.wan_backlog(t)})
+        except ValueError:
+            d = CLOUD
+        esc_drain = self.sched.nodes[d].drain_time
+        if d == CLOUD:
+            esc_drain += self.transport.wan_backlog(t)
+        for e in edges:
+            drain = max(self.sched.nodes[e].drain_time, esc_drain)
+            self.states[e] = self.states[e].update(
+                drain, 1.0, self.sc.interval_s)
+
+    # --- the fused launch -----------------------------------------------------
+    def triage_tick(self, batches: Dict[int, List[Item]]
+                    ) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
+        """Triage every edge's tick batch in ONE kernel launch.
+
+        ``batches`` maps live edge id -> that edge's items this tick.
+        Returns per-edge ``(routes, slots)`` arrays trimmed to the true
+        batch lengths."""
+        if not batches:
+            return {}
+        edges = sorted(batches)
+        lengths = [len(batches[e]) for e in edges]
+        conf = np.full((len(edges), max(lengths)), -1.0, np.float32)
+        for i, e in enumerate(edges):
+            conf[i, :lengths[i]] = [it.conf for it in batches[e]]
+        thresholds = np.asarray(
+            [[self.states[e].alpha, self.states[e].beta] for e in edges],
+            np.float32)
+        routes, slots, _ = ops.triage_fleet(
+            conf, thresholds, capacity=self.sc.escalation_capacity)
+        self.launches += 1
+        routes, slots = np.asarray(routes), np.asarray(slots)
+        return {e: (routes[i, :lengths[i]], slots[i, :lengths[i]])
+                for i, e in enumerate(edges)}
+
+    def final_thresholds(self) -> Dict[int, Tuple[float, float]]:
+        """Per-edge (alpha, beta) at end of run (reported for inspection)."""
+        return {e: (s.alpha, s.beta) for e, s in self.states.items()}
