@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
+from repro.system import PixelFrontend, pixel_city, synthetic_confidence_stream
 
 
 def _time(fn, *args, n=10, **kw):
@@ -104,6 +105,33 @@ def run(verbose: bool = True):
               f"{E}-launch loop {us_loop:.1f} us -> "
               f"{derived['fleet_tick_speedup_vs_per_edge_loop']}x, "
               f"{E}x fewer launches")
+    # frontend throughput, fig5-style scheme comparison: the full pixel path
+    # (render -> framediff -> crops -> CQ scores) vs the model-free
+    # confidence stream on the same small scenario, in detections/s.  The
+    # frontend cache is disabled so every timed call does the real work.
+    sc = pixel_city(num_cameras=4, duration_s=3.0)
+    pix = PixelFrontend(seed=0, cache=False)
+    n_pix = len(pix.stream(sc))            # warm the jit caches
+    # every cache-disabled stream() call does the full render/score work, so
+    # time exactly ONE post-warmup call instead of _time's warmup pair
+    t0 = time.perf_counter()
+    pix.stream(sc)
+    us_pix = (time.perf_counter() - t0) * 1e6
+    n_conf = len(synthetic_confidence_stream(sc))
+    us_conf = _time(synthetic_confidence_stream, sc, n=3)
+    derived.update({
+        "pixel_frontend_items_per_s": round(n_pix / (us_pix * 1e-6), 1),
+        "confidence_frontend_items_per_s": round(
+            n_conf / (us_conf * 1e-6), 1),
+        "pixel_vs_confidence_throughput_ratio": round(
+            (n_pix / us_pix) / (n_conf / us_conf), 6),
+    })
+    if verbose:
+        print(f"frontend stream ({sc.num_cameras} cams, {sc.duration_s:.0f}s"
+              f"): pixel {n_pix} items in {us_pix/1e6:.2f} s "
+              f"({derived['pixel_frontend_items_per_s']}/s) vs confidence "
+              f"{n_conf} items "
+              f"({derived['confidence_frontend_items_per_s']}/s)")
     return out, derived
 
 

@@ -1,25 +1,60 @@
 """Run the end-to-end query pipeline over every registered scenario.
 
-Each scenario is simulated under all four query schemes with a model-free
-synthetic detection stream (fast; no training in the loop).  For the full
-CQ-model-scored workload, see ``benchmarks/table2_single_edge.py`` etc.
+Each scenario is simulated under all four query schemes.  The default
+frontend is the model-free synthetic confidence stream (fast; no model in
+the loop); ``--frontend pixel`` runs the paper's full pixel path instead
+(rendered frames -> Pallas framediff/morphology -> motion crops -> CQ
+scores).  For the CQ-model-scored workload, see
+``benchmarks/table2_single_edge.py`` etc.
+
+``--json-out DIR`` writes one ``<scenario>-<frontend>.json`` report per
+scenario (the CI smoke job uploads these as build artifacts) and fails the
+run if any metric comes back NaN or the pipeline answered zero items — a
+smoke artifact full of NaNs must fail loudly, not upload quietly.
 
   PYTHONPATH=src python examples/run_scenarios.py
   PYTHONPATH=src python examples/run_scenarios.py --scenario bursty_crowds
+  PYTHONPATH=src python examples/run_scenarios.py \
+      --scenario pixel_city --frontend pixel --json-out reports
 """
 import argparse
+import json
+import math
+import os
 import sys
 
 sys.path.insert(0, "src")
 
-from repro.system import SCENARIOS, SCHEMES, run_query, \
-    synthetic_confidence_stream  # noqa: E402
+from repro.system import (  # noqa: E402
+    SCENARIOS,
+    SCHEMES,
+    PixelFrontend,
+    run_query,
+    synthetic_confidence_stream,
+)
+
+
+def validate(name: str, scheme: str, report) -> None:
+    """Empty or NaN metrics make the JSON artifact meaningless: die loudly."""
+    if len(report.latencies) == 0:
+        sys.exit(f"FAIL {name}/{scheme}: pipeline answered zero items")
+    bad = [k for k, v in report.summary().items()
+           if isinstance(v, (int, float)) and not math.isfinite(v)]
+    if bad:
+        sys.exit(f"FAIL {name}/{scheme}: non-finite metrics {bad}")
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenario", choices=sorted(SCENARIOS), default=None,
                     help="run just one scenario (default: all)")
+    ap.add_argument("--frontend", choices=("confidence", "pixel"),
+                    default="confidence",
+                    help="detection stream: model-free confidence synthesis "
+                         "(default) or the rendered-frames pixel path")
+    ap.add_argument("--json-out", metavar="DIR", default=None,
+                    help="write per-scenario JSON reports to DIR and fail "
+                         "on NaN/empty metrics")
     ap.add_argument("--cameras", type=int, default=6)
     ap.add_argument("--duration", type=float, default=60.0)
     ap.add_argument("--seed", type=int, default=0)
@@ -32,24 +67,49 @@ def main():
         # the default sweep stays small-fleet (run it explicitly, as
         # `make bench-smoke` does)
         names = [n for n in sorted(SCENARIOS) if n != "city_scale"]
+    frontend = PixelFrontend(seed=args.seed) \
+        if args.frontend == "pixel" else None
     for name in names:
         sc = SCENARIOS[name](num_cameras=args.cameras,
                              duration_s=args.duration, seed=args.seed)
-        stream = synthetic_confidence_stream(sc)
-        print(f"\n== {name} — {len(stream)} detections, "
+        if frontend is not None:
+            stream = frontend.stream(sc)     # cached across the scheme sweep
+        else:
+            stream = synthetic_confidence_stream(sc)
+        print(f"\n== {name} [{args.frontend}] — {len(stream)} detections, "
               f"{sc.num_edges} edge(s) + cloud ==")
         print(f"{'scheme':20s}{'F2':>8s}{'avg_lat':>9s}{'p99':>9s}"
               f"{'WAN_MB':>8s}{'LAN_MB':>8s}{'escal':>7s}{'rerouted':>9s}"
               f"{'launches':>9s}{'l/tick':>7s}")
+        per_scheme = {}
         for scheme in SCHEMES:
-            r = run_query(sc.with_scheme(scheme), items=stream)
+            if frontend is not None:
+                r = run_query(sc.with_scheme(scheme), frontend=frontend)
+            else:
+                r = run_query(sc.with_scheme(scheme), items=stream)
+            if args.json_out:
+                validate(name, scheme, r)
             s = r.summary()
+            per_scheme[scheme] = {
+                **s, "n_items": len(r.latencies),
+                "stage_timings": {k: round(v, 4)
+                                  for k, v in r.stage_timings.items()}}
             print(f"{scheme:20s}{s['accuracy_F2']:8.3f}"
                   f"{s['avg_latency_s']:9.3f}{s['p99_latency_s']:9.3f}"
                   f"{s['bandwidth_MB']:8.2f}{s['lan_MB']:8.2f}"
                   f"{s['escalated']:7d}{s['rerouted']:9d}"
                   f"{s['kernel_launches']:9d}"
                   f"{s['launches_per_tick']:7.2f}")
+        if args.json_out:
+            os.makedirs(args.json_out, exist_ok=True)
+            path = os.path.join(args.json_out,
+                                f"{name}-{args.frontend}.json")
+            with open(path, "w") as fh:
+                json.dump({"scenario": name, "frontend": args.frontend,
+                           "n_detections": len(stream),
+                           "num_edges": sc.num_edges,
+                           "schemes": per_scheme}, fh, indent=2)
+            print(f"   -> {path}")
 
 
 if __name__ == "__main__":

@@ -146,6 +146,25 @@ def _bucket(n: int, minimum: int = 8) -> int:
     return max(minimum, 1 << (max(n - 1, 1)).bit_length())
 
 
+def score_crops(score_fn, tokens: jax.Array, *, minimum: int = 8) -> jax.Array:
+    """Bucket-padded per-tick crop scoring: ONE classifier launch per tick.
+
+    ``tokens`` is the (N, T) patch-token matrix of every motion crop the
+    whole camera fleet produced this scheduler tick and ``score_fn`` a jit'd
+    ``(N, T) tokens -> (N,) confidences`` model apply.  N is padded up to a
+    power-of-two bucket (min 8) before the single call — the same padding
+    contract as ``triage_fleet``, so a run's stream of varying tick batches
+    hits a handful of cached compilations — then the pad is sliced back
+    off.  Pad rows carry token 0; their scores never leave this function.
+    """
+    tokens = jnp.asarray(tokens, jnp.int32)
+    n = tokens.shape[0]
+    bucket = _bucket(n, minimum)
+    if bucket != n:
+        tokens = jnp.pad(tokens, ((0, bucket - n), (0, 0)))
+    return score_fn(tokens)[:n]
+
+
 @functools.partial(jax.jit, static_argnames=("capacity", "use_pallas"))
 def _triage_fleet(conf: jax.Array, thresholds: jax.Array, *, capacity: int,
                   use_pallas: bool = True):

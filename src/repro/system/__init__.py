@@ -5,20 +5,26 @@ fleet-triage Pallas launch per tick (per-edge adaptive thresholds) -> Eq. 7
 allocator -> per-node queues -> metrics.  Scenario presets cover the
 paper's three settings (Tables II-IV) plus beyond-paper stress (bursty
 crowds, straggler/failing edge, the 64-edge/512-camera ``city_scale``
-fleet).  The engine is layered: ``events`` / ``transport`` / ``nodes`` /
-``triage`` / ``frontend`` behind a slim ``pipeline`` orchestrator.
+fleet, and the frames-in ``pixel_city`` operating point).  The engine is
+layered: ``events`` / ``transport`` / ``nodes`` / ``triage`` /
+``frontend`` (confidence-stream or the pixel/CNN path in
+``pixel_frontend``) behind a slim ``pipeline`` orchestrator.
 """
 from repro.system.frontend import ConfidenceStreamFrontend, Frontend
 from repro.system.metrics import QueryReport
 from repro.system.pipeline import QueryPipeline, run_query
+from repro.system.pixel_frontend import PixelFrontend
 from repro.system.scenario import (
     SCENARIOS,
     SCHEMES,
     Scenario,
     bursty_crowds,
     city_scale,
+    frame_schedule,
     heterogeneous_multi_edge,
     homogeneous_multi_edge,
+    pixel_city,
+    scenario_cameras,
     single_edge,
     straggler_edge,
     synthetic_confidence_stream,
@@ -27,6 +33,7 @@ from repro.system.scenario import (
 __all__ = [
     "ConfidenceStreamFrontend",
     "Frontend",
+    "PixelFrontend",
     "QueryPipeline",
     "QueryReport",
     "SCENARIOS",
@@ -34,9 +41,12 @@ __all__ = [
     "Scenario",
     "bursty_crowds",
     "city_scale",
+    "frame_schedule",
     "heterogeneous_multi_edge",
     "homogeneous_multi_edge",
+    "pixel_city",
     "run_query",
+    "scenario_cameras",
     "single_edge",
     "straggler_edge",
     "synthetic_confidence_stream",

@@ -38,6 +38,10 @@ class QueryReport:
     # (empty for the non-cascade schemes)
     thresholds: Dict[int, Tuple[float, float]] = \
         dataclasses.field(default_factory=dict)
+    # stage -> wall-clock seconds: frontend stages (the pixel path reports
+    # render_s / framediff_s / classify_s) plus the engine's triage_s —
+    # where a frames-to-answers run actually spent its compute
+    stage_timings: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     # --- accuracy -------------------------------------------------------------
     def f_score(self, lam: float = 2.0) -> float:

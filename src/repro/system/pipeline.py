@@ -248,7 +248,9 @@ class QueryPipeline:
             self._start_service(t, node)
 
     # --- main loop ------------------------------------------------------------
-    def run(self, items: Sequence[Item]) -> MX.QueryReport:
+    def run(self, items: Sequence[Item],
+            frontend_timings: Optional[Dict[str, float]] = None
+            ) -> MX.QueryReport:
         sc = self.sc
         self.events = EventQueue()
         self.transport = Transport(sc)
@@ -325,6 +327,8 @@ class QueryPipeline:
             per_node_served=dict(self.nodes.served),
             thresholds=self.triage_stage.final_thresholds()
             if sc.scheme in ("surveiledge", "surveiledge_fixed") else {},
+            stage_timings={**(frontend_timings or {}),
+                           "triage_s": self.triage_stage.elapsed_s},
         )
 
 
@@ -338,7 +342,11 @@ def run_query(scenario: Scenario,
     ``items`` (or ``scenario.items``) — a pre-scored stream, e.g. the
     CQ-model-scored benchmark workload, re-homed onto this scenario's
     topology — or, when no items are given, a model-free synthetic stream
-    from the scenario's camera fleet.
+    from the scenario's camera fleet.  Pass
+    ``frontend=PixelFrontend(...)`` (``repro.system.pixel_frontend``) to
+    run the paper's full pixel path instead: rendered frames -> Pallas
+    framediff/morphology -> motion crops -> CQ-classifier confidences,
+    with per-stage wall-clock in ``QueryReport.stage_timings``.
     """
     if frontend is not None and items is not None:
         raise ValueError("pass either items= or frontend=, not both "
@@ -346,4 +354,6 @@ def run_query(scenario: Scenario,
     if frontend is None:
         frontend = ConfidenceStreamFrontend(
             items if items is not None else scenario.items)
-    return QueryPipeline(scenario).run(frontend.stream(scenario))
+    stream = frontend.stream(scenario)
+    return QueryPipeline(scenario).run(
+        stream, frontend_timings=frontend.timings)

@@ -54,6 +54,8 @@ class Scenario:
     # --- stream --------------------------------------------------------------
     seed: int = 0
     items: Optional[Sequence[Item]] = None   # injected pre-scored stream
+    frame_hw: Optional[Tuple[int, int]] = None   # pixel path: camera frame
+    #                                              size override (H, W)
 
     @property
     def num_edges(self) -> int:
@@ -68,6 +70,42 @@ class Scenario:
         return dataclasses.replace(self, scheme=scheme)
 
 
+def scenario_cameras(sc: Scenario) -> List[SV.CameraSpec]:
+    """The scenario's camera fleet with its overrides applied.
+
+    Shared by the confidence-stream synthesizer and the pixel frontend so
+    both paths see the *same* cameras: burst overrides reshape the traffic
+    profile, ``frame_hw`` shrinks/grows the rendered frames (pixel path
+    only — the confidence path never renders)."""
+    cams = SV.make_cameras(sc.num_cameras, seed=sc.seed)
+    if (sc.burst_boost is None and sc.burst_rate is None
+            and sc.frame_hw is None):
+        return cams
+    h, w = sc.frame_hw if sc.frame_hw is not None else (None, None)
+    return [dataclasses.replace(
+        c,
+        busy_boost=sc.burst_boost if sc.burst_boost is not None
+        else c.busy_boost,
+        base_rate=sc.burst_rate if sc.burst_rate is not None
+        else c.base_rate,
+        height=h if h is not None else c.height,
+        width=w if w is not None else c.width) for c in cams]
+
+
+def frame_schedule(sc: Scenario) -> np.ndarray:
+    """Per-camera frame-capture schedule for the pixel path.
+
+    Returns a (T, C) matrix of capture instants: camera ``j`` samples one
+    frame triple per scheduler tick ``k`` at ``k*interval_s + stagger_j``,
+    where the per-camera stagger is a deterministic draw in [0, interval_s)
+    — a fleet's captures spread across the tick instead of all landing on
+    the same instant, as real cameras' sampling clocks do."""
+    ts = np.arange(0.0, sc.duration_s, sc.interval_s)
+    rng = np.random.default_rng(sc.seed + 13)
+    stagger = rng.uniform(0.0, sc.interval_s, sc.num_cameras)
+    return ts[:, None] + stagger[None, :]
+
+
 def synthetic_confidence_stream(sc: Scenario) -> List[Item]:
     """Model-free item stream: Poisson arrivals from the procedural camera
     fleet, edge confidence drawn from class-conditional Beta distributions
@@ -79,14 +117,7 @@ def synthetic_confidence_stream(sc: Scenario) -> List[Item]:
     cost stays sub-linear in Python overhead per item — city-scale fleets
     (hundreds of cameras) synthesize in milliseconds."""
     rng = np.random.default_rng(sc.seed)
-    cams = SV.make_cameras(sc.num_cameras, seed=sc.seed)
-    if sc.burst_boost is not None or sc.burst_rate is not None:
-        cams = [dataclasses.replace(
-            c,
-            busy_boost=sc.burst_boost if sc.burst_boost is not None
-            else c.busy_boost,
-            base_rate=sc.burst_rate if sc.burst_rate is not None
-            else c.base_rate) for c in cams]
+    cams = scenario_cameras(sc)
     ts = np.arange(0.0, sc.duration_s, sc.interval_s)              # (T,)
     period = np.asarray([c.busy_period_s for c in cams])           # (C,)
     phase = 2 * np.pi * ts[:, None] / period[None, :] \
@@ -185,6 +216,22 @@ def city_scale(num_cameras: int = 512, num_edges: int = 64,
                     **kw)
 
 
+def pixel_city(num_cameras: int = 12, num_edges: int = 4, **kw) -> Scenario:
+    """Pixel-path operating point: the frames->query loop at a size the
+    CPU-only interpret-mode kernels finish inside the CI smoke budget.
+
+    Run it with ``run_query(pixel_city(), frontend=PixelFrontend())``: every
+    camera renders one frame triple per tick (staggered within the tick via
+    ``frame_schedule``), the Pallas framediff/morphology cascade extracts
+    motion crops, and the CQ classifier scores each tick's fleet-wide crop
+    batch in one bucket-padded launch.  A mixed 1.0x/0.5x edge rack keeps
+    Eq. 7 non-trivial without city_scale's fleet size."""
+    duration = kw.pop("duration_s", 12.0)
+    speeds = tuple(1.0 if i % 2 == 0 else 0.5 for i in range(num_edges))
+    return Scenario(name="pixel_city", edge_speeds=speeds,
+                    num_cameras=num_cameras, duration_s=duration, **kw)
+
+
 SCENARIOS: Dict[str, Callable[..., Scenario]] = {
     "single_edge": single_edge,
     "homogeneous_multi_edge": homogeneous_multi_edge,
@@ -192,4 +239,5 @@ SCENARIOS: Dict[str, Callable[..., Scenario]] = {
     "bursty_crowds": bursty_crowds,
     "straggler_edge": straggler_edge,
     "city_scale": city_scale,
+    "pixel_city": pixel_city,
 }

@@ -16,6 +16,7 @@ widens its own, independently.
 """
 from __future__ import annotations
 
+import time
 from typing import Dict, Iterable, List, Tuple
 
 import numpy as np
@@ -51,6 +52,7 @@ class TriageStage:
         self.states: Dict[int, ThresholdState] = {
             e: proto for e in sc.edge_ids}
         self.launches = 0
+        self.elapsed_s = 0.0         # wall clock inside triage_tick
 
     # --- Eqs. 8-9, once per edge per tick ------------------------------------
     def refresh(self, t: float, edges: Iterable[int]) -> None:
@@ -85,6 +87,7 @@ class TriageStage:
         batch lengths."""
         if not batches:
             return {}
+        t0 = time.perf_counter()
         edges = sorted(batches)
         lengths = [len(batches[e]) for e in edges]
         conf = np.full((len(edges), max(lengths)), -1.0, np.float32)
@@ -97,8 +100,10 @@ class TriageStage:
             conf, thresholds, capacity=self.sc.escalation_capacity)
         self.launches += 1
         routes, slots = np.asarray(routes), np.asarray(slots)
-        return {e: (routes[i, :lengths[i]], slots[i, :lengths[i]])
-                for i, e in enumerate(edges)}
+        out = {e: (routes[i, :lengths[i]], slots[i, :lengths[i]])
+               for i, e in enumerate(edges)}
+        self.elapsed_s += time.perf_counter() - t0
+        return out
 
     def final_thresholds(self) -> Dict[int, Tuple[float, float]]:
         """Per-edge (alpha, beta) at end of run (reported for inspection)."""

@@ -57,6 +57,7 @@ def test_triage_fleet_matches_ref_fleet():
         np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
 
 
+@pytest.mark.slow
 def test_triage_fleet_property_matches_independent_calls():
     hypothesis = pytest.importorskip(
         "hypothesis",

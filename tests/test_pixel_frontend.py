@@ -1,0 +1,173 @@
+"""Pixel path end to end: frames -> motion mask -> boxes -> crops -> CQ
+scores -> Item stream -> run_query, all CPU-only (interpret=True).
+
+Covers Pallas/ref parity through the whole detection stage, the
+bucket-padded crop-scoring launch, truth matching, the static-scene
+zero-item invariant, and the pixel_city frames->report acceptance run
+(stage timings nonzero, slow-marked full size in the non-blocking tier).
+"""
+import dataclasses
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.data import synthetic_video as SV
+from repro.detection import pipeline as DP
+from repro.detection.components import Box
+from repro.kernels import ops
+from repro.system import PixelFrontend, pixel_city, run_query
+from repro.system.pixel_frontend import match_truth
+
+
+def _busy_camera(seed, rate=2.0):
+    cam = SV.make_cameras(1, seed=seed)[0]
+    cam.base_rate, cam.busy_boost = rate, 0.0
+    return cam
+
+
+# --- detection stage: Pallas vs ref parity, frames through scores -------------
+
+
+def test_detect_pallas_matches_ref_end_to_end():
+    """The full frames -> mask -> boxes -> crops stage is identical under
+    the Pallas kernels (interpret mode) and the pure-jnp reference."""
+    rng = np.random.default_rng(0)
+    frames, _ = SV.render_triple(_busy_camera(11), 0.0, rng)
+    dets_p = DP.detect(frames, use_pallas=True)[0]
+    dets_r = DP.detect(frames, use_pallas=False)[0]
+    assert len(dets_p) == len(dets_r) > 0
+    for dp, dr in zip(dets_p, dets_r):
+        assert dp.box == dr.box
+        np.testing.assert_array_equal(dp.crop, dr.crop)
+
+
+def test_detection_scores_pallas_ref_parity():
+    """Classifier confidences downstream of both detection paths agree."""
+    rng = np.random.default_rng(1)
+    frames, _ = SV.render_triple(_busy_camera(12), 0.0, rng)
+    fe = PixelFrontend(seed=0)
+    score = functools.partial(fe._conf_fn, fe.params)
+    confs = []
+    for use_pallas in (True, False):
+        crops = np.stack([d.crop
+                          for d in DP.detect(frames,
+                                             use_pallas=use_pallas)[0]])
+        tokens = SV.crops_to_tokens(crops, fe.cfg.vocab_size)
+        confs.append(np.asarray(ops.score_crops(score, tokens)))
+    np.testing.assert_allclose(confs[0], confs[1], rtol=1e-6)
+    assert np.all((confs[0] >= 0) & (confs[0] <= 1))
+
+
+def test_score_crops_bucket_padding_is_invisible():
+    """Padding N up to the power-of-two bucket must not change the first N
+    scores, and the padded launch shape must be the bucket size."""
+    fe = PixelFrontend(seed=3)
+    rng = np.random.default_rng(2)
+    crops = np.stack([SV.object_crop(c % SV.NUM_CLASSES, rng)
+                      for c in range(13)])
+    tokens = SV.crops_to_tokens(crops, fe.cfg.vocab_size)
+    seen = []
+
+    def spy(t):
+        seen.append(t.shape)
+        return fe._conf_fn(fe.params, t)
+
+    got = np.asarray(ops.score_crops(spy, tokens))
+    assert seen == [(16, tokens.shape[1])]          # 13 -> bucket 16
+    direct = np.asarray(fe._conf_fn(fe.params, jax.numpy.asarray(tokens)))
+    np.testing.assert_allclose(got, direct, rtol=1e-5, atol=1e-6)
+
+
+# --- truth matching -----------------------------------------------------------
+
+
+def test_match_truth_picks_nearest_sprite_and_rejects_noise():
+    truth = SV.FrameTruth(classes=[3, 7], boxes=[(10, 10), (60, 90)])
+    on_moped = Box(8, 8, 28, 28, 441)        # center (18, 18) ~ sprite 0
+    on_dog = Box(58, 88, 78, 108, 441)       # center (68, 98) ~ sprite 1
+    far = Box(0, 60, 10, 70, 121)            # matches nothing
+    assert match_truth(on_moped, truth) == 3
+    assert match_truth(on_dog, truth) == 7
+    assert match_truth(far, truth) is None
+
+
+# --- the frontend -------------------------------------------------------------
+
+
+def test_static_scene_yields_zero_items():
+    """No moving objects -> no motion mask -> empty stream (sensor noise
+    alone must never fabricate detections)."""
+    sc = pixel_city(num_cameras=2, duration_s=3.0, burst_rate=0.0,
+                    burst_boost=0.0)
+    assert PixelFrontend(seed=0).stream(sc) == []
+
+
+def test_pixel_frontend_items_are_well_formed():
+    sc = pixel_city(num_cameras=3, num_edges=2, duration_s=4.0, seed=1)
+    fe = PixelFrontend(seed=1)
+    items = fe.stream(sc)
+    assert len(items) > 0
+    t = [it.t_arrival for it in items]
+    assert t == sorted(t) and 0 <= t[0] and t[-1] < sc.duration_s
+    for it in items:
+        assert 0.0 <= it.conf <= 1.0
+        assert it.edge_device in sc.edge_ids
+        assert 0 <= it.camera < sc.num_cameras
+        assert it.edge_device == it.camera % sc.num_edges + 1
+        assert it.nbytes == fe.crop * fe.crop * 3
+    # per-stage wall clock was recorded for the model-in-the-loop stages
+    assert fe.timings["framediff_s"] > 0
+    assert fe.timings["classify_s"] > 0
+
+
+def test_pixel_frontend_stream_cache_reuses_render():
+    sc = pixel_city(num_cameras=2, duration_s=3.0, seed=2)
+    fe = PixelFrontend(seed=2)
+    first = fe.stream(sc)
+    launches = fe.launches
+    again = fe.stream(sc)                     # same scenario -> cache hit
+    assert again == first
+    assert fe.launches == launches
+    # a scheme change must hit, a stream-shaping change must miss
+    assert fe.stream(sc.with_scheme("edge_only")) == first
+    assert fe.launches == launches
+    other = fe.stream(dataclasses.replace(sc, seed=9))
+    assert fe.launches > launches
+    assert other != first
+
+
+def test_run_query_pixel_report_has_stage_timings():
+    """frames -> triage -> allocation -> metrics, small enough for tier-1:
+    the report carries nonzero framediff/classify/triage stage timings."""
+    sc = pixel_city(num_cameras=4, num_edges=2, duration_s=5.0, seed=0)
+    fe = PixelFrontend(seed=0)
+    r = run_query(sc, frontend=fe)
+    assert len(r.latencies) == len(fe.stream(sc)) > 0
+    assert r.stage_timings["framediff_s"] > 0
+    assert r.stage_timings["classify_s"] > 0
+    assert r.stage_timings["triage_s"] > 0
+    assert r.kernel_launches > 0
+    # confidence-stream runs keep the frontend stages out of the report
+    r_conf = run_query(sc)
+    assert "framediff_s" not in r_conf.stage_timings
+    assert "triage_s" in r_conf.stage_timings
+
+
+@pytest.mark.slow
+def test_run_query_pixel_city_full_acceptance():
+    """The full pixel_city preset (12 cameras, 12 s), as the CI smoke job
+    runs it: every scheme answers the whole stream off one render pass."""
+    sc = pixel_city()
+    fe = PixelFrontend(seed=0)
+    n = len(fe.stream(sc))
+    assert n > 0
+    for scheme in ("surveiledge", "edge_only", "cloud_only"):
+        r = run_query(sc.with_scheme(scheme), frontend=fe)
+        assert len(r.latencies) == n
+        assert np.isfinite(r.avg_latency)
+    r = run_query(sc, frontend=fe)
+    assert r.stage_timings["framediff_s"] > 0
+    assert r.stage_timings["classify_s"] > 0
+    assert r.stage_timings["triage_s"] > 0

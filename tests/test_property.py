@@ -4,6 +4,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# hypothesis-heavy: runs hundreds of examples per property, so the module
+# lives in the slow tier (`make test-slow` / the non-blocking CI job)
+pytestmark = pytest.mark.slow
+
 pytest.importorskip(
     "hypothesis",
     reason="property tests need hypothesis (pip install -r "
