@@ -44,6 +44,7 @@ lint:            ## ruff check (CI blocks on this; skipped when ruff is absent)
 bench-smoke:     ## fast end-to-end sanity; writes per-scenario JSON reports to reports/
 	$(PY) examples/run_scenarios.py --cameras 4 --duration 30 --json-out reports
 	$(PY) examples/run_scenarios.py --scenario city_scale --duration 20 --json-out reports
+	$(PY) examples/run_scenarios.py --scenario drifting_city --cameras 8 --duration 60 --json-out reports
 	$(PY) examples/run_scenarios.py --scenario pixel_city --frontend pixel --duration 10 --json-out reports
 	$(PY) examples/quickstart.py
 

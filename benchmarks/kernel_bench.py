@@ -64,6 +64,20 @@ def run(verbose: bool = True):
     rows.append(("triage_fleet_pallas_interp",
                  _time(ops.triage_fleet, fleet_conf, fleet_th, capacity=64),
                  bytes_fleet))
+    # fleet recalibration: one fused (E, N) Platt-fit launch per update
+    # event — the feedback loop's whole fleet in ONE call (vs E per-edge
+    # fits).  The NumPy ref is a per-row float64 Newton loop, so here the
+    # fused jnp/Pallas path is also the *algorithmically* interesting one.
+    Ec, Nc = 64, 256
+    cal_s = jax.random.uniform(jax.random.PRNGKey(11), (Ec, Nc))
+    cal_y = (jax.random.uniform(jax.random.PRNGKey(12), (Ec, Nc))
+             < cal_s).astype(jnp.float32)
+    bytes_cal = Ec * Nc * 4 * 2 + Ec * 2 * 4
+    rows.append(("calibrate_fleet_ref",
+                 _time(ops.calibrate_fleet, cal_s, cal_y,
+                       use_pallas=False, n=3), bytes_cal))
+    rows.append(("calibrate_fleet_pallas_interp",
+                 _time(ops.calibrate_fleet, cal_s, cal_y, n=3), bytes_cal))
     # flash attention (small shape; interpret mode on CPU)
     qk = jax.random.normal(jax.random.PRNGKey(3), (1, 4, 128, 64))
     kk = jax.random.normal(jax.random.PRNGKey(4), (1, 2, 128, 64))

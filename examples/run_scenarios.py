@@ -7,17 +7,27 @@ the loop); ``--frontend pixel`` runs the paper's full pixel path instead
 scores).  For the CQ-model-scored workload, see
 ``benchmarks/table2_single_edge.py`` etc.
 
+Scenarios with the cloud->edge feedback loop enabled (``update_period_s``
+set, e.g. ``drifting_city``) additionally run the open-loop ablation
+(``update_period_s=None``) as a fifth ``surveiledge_no_update`` row, so
+one report carries the closed-vs-open comparison — including the windowed
+``accuracy_timeline`` that makes post-drift recovery visible.
+
 ``--json-out DIR`` writes one ``<scenario>-<frontend>.json`` report per
 scenario (the CI smoke job uploads these as build artifacts) and fails the
-run if any metric comes back NaN or the pipeline answered zero items — a
-smoke artifact full of NaNs must fail loudly, not upload quietly.
+run if any metric comes back NaN, the pipeline answered zero items, or a
+row is internally inconsistent (``model_updates > 0`` with zero downlink
+bytes means the loop "ran" without shipping anything — a broken report
+must fail loudly, not upload quietly).  ``load_report`` applies the same
+consistency gate when reading an artifact back.
 
   PYTHONPATH=src python examples/run_scenarios.py
-  PYTHONPATH=src python examples/run_scenarios.py --scenario bursty_crowds
+  PYTHONPATH=src python examples/run_scenarios.py --scenario drifting_city
   PYTHONPATH=src python examples/run_scenarios.py \
       --scenario pixel_city --frontend pixel --json-out reports
 """
 import argparse
+import dataclasses
 import json
 import math
 import os
@@ -34,14 +44,49 @@ from repro.system import (  # noqa: E402
 )
 
 
+def check_consistency(name: str, scheme: str, summary: dict) -> None:
+    """Raise ``ValueError`` on internally inconsistent report rows.
+
+    Shared by the writer (``validate``) and the reader (``load_report``):
+    a run that claims fused recalibration launches but shipped zero bytes
+    down the WAN downlink cannot have closed the loop.  Gates on the RAW
+    byte counter — MB rounding would wave through (or falsely damn) tiny
+    ``update_nbytes`` payloads."""
+    bytes_down = summary.get("downloaded_bytes",
+                             summary.get("downloaded_MB", 0.0))
+    if summary.get("model_updates", 0) > 0 and bytes_down == 0:
+        raise ValueError(
+            f"{name}/{scheme}: model_updates="
+            f"{summary['model_updates']} but zero downlink bytes — model "
+            f"updates that never crossed the downlink")
+
+
 def validate(name: str, scheme: str, report) -> None:
     """Empty or NaN metrics make the JSON artifact meaningless: die loudly."""
     if len(report.latencies) == 0:
         sys.exit(f"FAIL {name}/{scheme}: pipeline answered zero items")
-    bad = [k for k, v in report.summary().items()
+    s = report.summary()
+    bad = [k for k, v in s.items()
            if isinstance(v, (int, float)) and not math.isfinite(v)]
     if bad:
         sys.exit(f"FAIL {name}/{scheme}: non-finite metrics {bad}")
+    try:
+        check_consistency(name, scheme, s)
+    except ValueError as e:
+        sys.exit(f"FAIL {e}")
+
+
+def load_report(path: str) -> dict:
+    """Read a scenario JSON artifact back, re-checking row consistency.
+
+    Raises ``ValueError`` for inconsistent rows (e.g. ``model_updates > 0``
+    with zero downlink bytes), so downstream consumers never aggregate a
+    physically impossible run."""
+    with open(path) as fh:
+        doc = json.load(fh)
+    for scheme, row in doc.get("schemes", {}).items():
+        check_consistency(doc.get("scenario", path), scheme, row)
+    return doc
 
 
 def main():
@@ -54,7 +99,7 @@ def main():
                          "(default) or the rendered-frames pixel path")
     ap.add_argument("--json-out", metavar="DIR", default=None,
                     help="write per-scenario JSON reports to DIR and fail "
-                         "on NaN/empty metrics")
+                         "on NaN/empty/inconsistent metrics")
     ap.add_argument("--cameras", type=int, default=6)
     ap.add_argument("--duration", type=float, default=60.0)
     ap.add_argument("--seed", type=int, default=0)
@@ -78,25 +123,33 @@ def main():
             stream = synthetic_confidence_stream(sc)
         print(f"\n== {name} [{args.frontend}] — {len(stream)} detections, "
               f"{sc.num_edges} edge(s) + cloud ==")
-        print(f"{'scheme':20s}{'F2':>8s}{'avg_lat':>9s}{'p99':>9s}"
-              f"{'WAN_MB':>8s}{'LAN_MB':>8s}{'escal':>7s}{'rerouted':>9s}"
-              f"{'launches':>9s}{'l/tick':>7s}")
+        print(f"{'scheme':22s}{'F2':>8s}{'avg_lat':>9s}{'p99':>9s}"
+              f"{'WAN_MB':>8s}{'LAN_MB':>8s}{'DL_MB':>7s}{'upd':>5s}"
+              f"{'escal':>7s}{'rerouted':>9s}{'launches':>9s}{'l/tick':>7s}")
+        # the feedback loop's ablation rides along as a fifth row wherever
+        # the loop is enabled: same stream, update_period_s=None
+        variants = [(s, sc.with_scheme(s)) for s in SCHEMES]
+        if sc.update_period_s is not None:
+            variants.append(("surveiledge_no_update", dataclasses.replace(
+                sc.with_scheme("surveiledge"), update_period_s=None)))
         per_scheme = {}
-        for scheme in SCHEMES:
+        for label, variant in variants:
             if frontend is not None:
-                r = run_query(sc.with_scheme(scheme), frontend=frontend)
+                r = run_query(variant, frontend=frontend)
             else:
-                r = run_query(sc.with_scheme(scheme), items=stream)
+                r = run_query(variant, items=stream)
             if args.json_out:
-                validate(name, scheme, r)
+                validate(name, label, r)
             s = r.summary()
-            per_scheme[scheme] = {
+            per_scheme[label] = {
                 **s, "n_items": len(r.latencies),
+                "accuracy_timeline": r.accuracy_timeline(),
                 "stage_timings": {k: round(v, 4)
                                   for k, v in r.stage_timings.items()}}
-            print(f"{scheme:20s}{s['accuracy_F2']:8.3f}"
+            print(f"{label:22s}{s['accuracy_F2']:8.3f}"
                   f"{s['avg_latency_s']:9.3f}{s['p99_latency_s']:9.3f}"
                   f"{s['bandwidth_MB']:8.2f}{s['lan_MB']:8.2f}"
+                  f"{s['downloaded_MB']:7.2f}{s['model_updates']:5d}"
                   f"{s['escalated']:7d}{s['rerouted']:9d}"
                   f"{s['kernel_launches']:9d}"
                   f"{s['launches_per_tick']:7.2f}")
@@ -109,6 +162,7 @@ def main():
                            "n_detections": len(stream),
                            "num_edges": sc.num_edges,
                            "schemes": per_scheme}, fh, indent=2)
+            load_report(path)            # round-trip the consistency gate
             print(f"   -> {path}")
 
 

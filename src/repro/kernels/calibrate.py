@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: fused fleet-wide confidence recalibration (Platt).
+
+This is the compute heart of the cloud->edge learning loop: every cloud
+re-classification is an exact label for the edge confidence that escalated,
+and every ``update_period_s`` the feedback stage fits, for EVERY edge at
+once, a two-parameter Platt map
+
+    conf' = sigmoid(a * logit(conf) + b)
+
+by masked Newton-Raphson on each edge's logistic negative log-likelihood —
+ONE (E, N) launch per update event, the same bucket-padded layout as
+``triage_fleet``.  Rows are independent: all reductions run along the
+sample axis, the 2x2 Newton system is solved in closed form per row
+(ridge-damped so fully-masked rows stay finite), and degenerate rows (too
+few labels, or labels all one class) fall back to the identity (1, 0).
+
+Pad lanes carry score -1.0 (same sentinel as ``triage_fleet``'s pad
+convention) and are masked out of every sum, so padding can never move a
+fit; pad edge rows are fully masked and therefore come back as identity.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Score clipping before the logit transform.  apply_calibration on the
+# numpy side MUST use the same epsilon so train-time and serve-time
+# features agree.
+EPS = 1e-4
+PRIOR = 0.5           # MAP pull of (a, b) toward the identity (1, 0): a
+#                       dozen-label fit stays near identity, hundreds of
+#                       labels override it — bad small-sample maps are the
+#                       loop's main failure mode
+A_MIN, A_MAX = 0.05, 6.0
+B_MAX = 8.0
+
+
+def _fit_rows(scores, truths, *, iters: int, min_count: int):
+    """Shared fit body: (E, N) scores/0-1 truths -> ((E, 2) params, (E,) n).
+
+    Written in plain jnp so the Pallas kernel body and the ``ref`` oracle
+    are literally the same arithmetic (parity is then a layout test, not a
+    numerics test)."""
+    mask = (scores >= 0.0).astype(jnp.float32)
+    c = jnp.clip(scores, EPS, 1.0 - EPS)
+    x = jnp.log(c / (1.0 - c))                          # logit feature
+    y01 = truths.astype(jnp.float32)
+    n = jnp.sum(mask, axis=1)                           # (E,)
+    pos = jnp.sum(mask * y01, axis=1)
+    neg = n - pos
+    # Platt target smoothing: regress on (N+ + 1)/(N+ + 2) and 1/(N- + 2)
+    # instead of hard 0/1, so a by-chance-separable buffer cannot drive the
+    # fit to a step function (the classic Platt 1999 regularizer)
+    t_pos = ((pos + 1.0) / (pos + 2.0))[:, None]
+    t_neg = (1.0 / (neg + 2.0))[:, None]
+    y = jnp.where(y01 > 0.5, t_pos, t_neg)
+
+    def newton(_, ab):
+        a, b = ab[:, 0:1], ab[:, 1:2]                   # (E, 1)
+        p = jax.nn.sigmoid(a * x + b)
+        resid = mask * (p - y)
+        g0 = jnp.sum(resid * x, axis=1) + PRIOR * (ab[:, 0] - 1.0)
+        g1 = jnp.sum(resid, axis=1) + PRIOR * ab[:, 1]
+        w = mask * p * (1.0 - p)
+        h00 = jnp.sum(w * x * x, axis=1) + PRIOR
+        h01 = jnp.sum(w * x, axis=1)
+        h11 = jnp.sum(w, axis=1) + PRIOR
+        det = h00 * h11 - h01 * h01
+        da = (h11 * g0 - h01 * g1) / det
+        db = (h00 * g1 - h01 * g0) / det
+        a_new = jnp.clip(ab[:, 0] - da, A_MIN, A_MAX)
+        b_new = jnp.clip(ab[:, 1] - db, -B_MAX, B_MAX)
+        return jnp.stack([a_new, b_new], axis=1)
+
+    E = scores.shape[0]
+    # identity map (a=1, b=0) per row, built from scalar broadcasts only (a
+    # materialized [[1, 0]] constant may not be captured by a Pallas body)
+    init = jnp.concatenate([jnp.ones((E, 1), jnp.float32),
+                            jnp.zeros((E, 1), jnp.float32)], axis=1)
+    ab = jax.lax.fori_loop(0, iters, newton, init)
+    # degenerate rows keep the identity map: too few cloud labels, or the
+    # labels are single-class (a separable 1D logistic diverges)
+    ok = (n >= min_count) & (pos >= 1.0) & (pos <= n - 1.0)
+    params = jnp.where(ok[:, None], ab, init)
+    return params.astype(jnp.float32), n.astype(jnp.int32)
+
+
+def _calibrate_kernel(scores_ref, truths_ref, params_ref, count_ref, *,
+                      iters: int, min_count: int):
+    params, n = _fit_rows(scores_ref[...], truths_ref[...],
+                          iters=iters, min_count=min_count)
+    params_ref[...] = params
+    count_ref[...] = n
+
+
+def calibrate_fleet_pallas(scores: jax.Array, truths: jax.Array, *,
+                           iters: int, min_count: int,
+                           interpret: bool = True):
+    """scores (E, N) f32 (pad lanes -1.0), truths (E, N) f32 {0, 1} ->
+    (params (E, 2) f32 [a, b], counts (E,) i32 valid labels per edge)."""
+    E, N = scores.shape
+    kernel = functools.partial(_calibrate_kernel, iters=iters,
+                               min_count=min_count)
+    return pl.pallas_call(
+        kernel,
+        in_specs=[pl.BlockSpec((E, N), lambda: (0, 0)),
+                  pl.BlockSpec((E, N), lambda: (0, 0))],
+        out_specs=(pl.BlockSpec((E, 2), lambda: (0, 0)),
+                   pl.BlockSpec((E,), lambda: (0,))),
+        out_shape=(jax.ShapeDtypeStruct((E, 2), jnp.float32),
+                   jax.ShapeDtypeStruct((E,), jnp.int32)),
+        interpret=interpret,
+    )(scores, truths)

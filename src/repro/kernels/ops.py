@@ -11,7 +11,9 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.kernels import calibrate as _ca
 from repro.kernels import flash_attention as _fa
 from repro.kernels import framediff as _fd
 from repro.kernels import morphology as _mo
@@ -205,3 +207,48 @@ def triage_fleet(conf: jax.Array, thresholds: jax.Array, *, capacity: int,
     routes, slots, counts = _triage_fleet(
         conf, thresholds, capacity=capacity, use_pallas=use_pallas)
     return routes[:E, :n], slots[:E, :n], counts[:E]
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "min_count"))
+def _calibrate_fleet_pallas(scores: jax.Array, truths: jax.Array, *,
+                            iters: int, min_count: int):
+    return _ca.calibrate_fleet_pallas(scores, truths, iters=iters,
+                                      min_count=min_count,
+                                      interpret=INTERPRET)
+
+
+def calibrate_fleet(scores, truths, *, iters: int = 8, min_count: int = 8,
+                    use_pallas: bool = True):
+    """Fleet-wide Platt recalibration: ONE fused launch per update event.
+
+    ``scores`` is the (E, N) matrix of cloud-labeled edge confidences —
+    row e holds edge e's buffered escalation scores, right-padded with
+    -1.0 — and ``truths`` the matching (E, N) 0/1 cloud verdicts.  Returns
+    (params (E, 2) [a, b] of ``conf' = sigmoid(a*logit(conf)+b)``, counts
+    (E,) valid labels per edge).  Rows with fewer than ``min_count``
+    labels, or labels all one class, come back as the identity (1, 0).
+
+    Both axes are padded up to power-of-two buckets (min 8) before the
+    launch — the same jit-cache contract as ``triage_fleet`` — then the
+    pads are sliced back off.  Pad lanes use score=-1.0 and are masked out
+    of every reduction; pad edge rows are fully masked and therefore fit
+    to the identity.  The ``use_pallas=False`` path dispatches to the
+    independent NumPy oracle (``ref.calibrate_fleet_ref``) outside jit.
+    """
+    scores = jnp.asarray(scores, jnp.float32)
+    truths = jnp.asarray(truths, jnp.float32)
+    E, n = scores.shape
+    eb, nb = _bucket(E), _bucket(n)
+    if nb != n:
+        scores = jnp.pad(scores, ((0, 0), (0, nb - n)), constant_values=-1.0)
+        truths = jnp.pad(truths, ((0, 0), (0, nb - n)))
+    if eb != E:
+        scores = jnp.pad(scores, ((0, eb - E), (0, 0)), constant_values=-1.0)
+        truths = jnp.pad(truths, ((0, eb - E), (0, 0)))
+    if not use_pallas:
+        params, counts = _ref.calibrate_fleet_ref(
+            np.asarray(scores), np.asarray(truths), iters, min_count)
+    else:
+        params, counts = _calibrate_fleet_pallas(
+            scores, truths, iters=iters, min_count=min_count)
+    return params[:E], counts[:E]

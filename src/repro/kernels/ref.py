@@ -1,10 +1,11 @@
-"""Pure-jnp oracles for every Pallas kernel (the allclose reference)."""
+"""Pure-jnp/NumPy oracles for every Pallas kernel (the allclose reference)."""
 from __future__ import annotations
 
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def framediff_ref(f0: jax.Array, f1: jax.Array, f2: jax.Array,
@@ -103,3 +104,49 @@ def triage_fleet_ref(conf: jax.Array, thresholds: jax.Array,
     pos = jnp.cumsum(esc.astype(jnp.int32), axis=1) - 1
     slots = jnp.where(esc & (pos < capacity), pos, -1).astype(jnp.int32)
     return routes, slots, jnp.sum(esc.astype(jnp.int32), axis=1)
+
+
+def calibrate_fleet_ref(scores: np.ndarray, truths: np.ndarray,
+                        iters: int, min_count: int
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+    """NumPy twin of ``calibrate.calibrate_fleet_pallas``: per-edge Platt fit.
+
+    Deliberately an *independent* implementation (float64, explicit per-row
+    Newton loop) so the parity test checks the numerics, not the layout:
+    scores (E, N) with pad lanes -1.0, truths (E, N) {0, 1} ->
+    (params (E, 2) [a, b], counts (E,) valid labels).  Constants (clip
+    epsilon, ridge, clamps) mirror ``kernels/calibrate.py``.
+    """
+    from repro.kernels.calibrate import A_MAX, A_MIN, B_MAX, EPS, PRIOR
+    scores = np.asarray(scores, np.float64)
+    truths = np.asarray(truths, np.float64)
+    E = scores.shape[0]
+    params = np.tile(np.asarray([1.0, 0.0]), (E, 1))
+    counts = np.zeros(E, np.int32)
+    for e in range(E):
+        valid = scores[e] >= 0.0
+        counts[e] = int(valid.sum())
+        y01 = truths[e, valid]
+        n_pos = y01.sum()
+        if counts[e] < min_count or n_pos < 1 or n_pos > counts[e] - 1:
+            continue
+        n_neg = counts[e] - n_pos
+        # Platt target smoothing, same constants as the kernel
+        y = np.where(y01 > 0.5, (n_pos + 1.0) / (n_pos + 2.0),
+                     1.0 / (n_neg + 2.0))
+        c = np.clip(scores[e, valid], EPS, 1.0 - EPS)
+        x = np.log(c / (1.0 - c))
+        a, b = 1.0, 0.0
+        for _ in range(iters):
+            p = 1.0 / (1.0 + np.exp(-(a * x + b)))
+            g0 = float(np.sum((p - y) * x)) + PRIOR * (a - 1.0)
+            g1 = float(np.sum(p - y)) + PRIOR * b
+            w = p * (1.0 - p)
+            h00 = float(np.sum(w * x * x)) + PRIOR
+            h01 = float(np.sum(w * x))
+            h11 = float(np.sum(w)) + PRIOR
+            det = h00 * h11 - h01 * h01
+            a = float(np.clip(a - (h11 * g0 - h01 * g1) / det, A_MIN, A_MAX))
+            b = float(np.clip(b - (h00 * g1 - h01 * g0) / det, -B_MAX, B_MAX))
+        params[e] = (a, b)
+    return params.astype(np.float32), counts

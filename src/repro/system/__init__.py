@@ -5,11 +5,14 @@ fleet-triage Pallas launch per tick (per-edge adaptive thresholds) -> Eq. 7
 allocator -> per-node queues -> metrics.  Scenario presets cover the
 paper's three settings (Tables II-IV) plus beyond-paper stress (bursty
 crowds, straggler/failing edge, the 64-edge/512-camera ``city_scale``
-fleet, and the frames-in ``pixel_city`` operating point).  The engine is
-layered: ``events`` / ``transport`` / ``nodes`` / ``triage`` /
-``frontend`` (confidence-stream or the pixel/CNN path in
-``pixel_frontend``) behind a slim ``pipeline`` orchestrator.
+fleet, the concept-drift ``drifting_city``, and the frames-in
+``pixel_city`` operating point).  The engine is layered: ``events`` /
+``transport`` / ``nodes`` / ``triage`` / ``feedback`` (the cloud->edge
+online recalibration loop) / ``frontend`` (confidence-stream or the
+pixel/CNN path in ``pixel_frontend``) behind a slim ``pipeline``
+orchestrator.
 """
+from repro.system.feedback import FeedbackStage, apply_calibration
 from repro.system.frontend import ConfidenceStreamFrontend, Frontend
 from repro.system.metrics import QueryReport
 from repro.system.pipeline import QueryPipeline, run_query
@@ -20,6 +23,7 @@ from repro.system.scenario import (
     Scenario,
     bursty_crowds,
     city_scale,
+    drifting_city,
     frame_schedule,
     heterogeneous_multi_edge,
     homogeneous_multi_edge,
@@ -32,6 +36,7 @@ from repro.system.scenario import (
 
 __all__ = [
     "ConfidenceStreamFrontend",
+    "FeedbackStage",
     "Frontend",
     "PixelFrontend",
     "QueryPipeline",
@@ -39,8 +44,10 @@ __all__ = [
     "SCENARIOS",
     "SCHEMES",
     "Scenario",
+    "apply_calibration",
     "bursty_crowds",
     "city_scale",
+    "drifting_city",
     "frame_schedule",
     "heterogeneous_multi_edge",
     "homogeneous_multi_edge",

@@ -21,7 +21,11 @@ class Task:
     item: Item
     phase: str                    # 'classify' (CQ) or 'reclassify' (accurate)
     decision: Optional[bool]      # set for classify tasks at triage time
-    tx_s: float = 0.0             # transfer time to attribute to the node
+    tx_s: float = 0.0             # seconds this task spent on the wire
+    #                               (informational; the aggregate lives in
+    #                               Transport — never fed to the node
+    #                               latency estimators, which would let one
+    #                               congestion burst bias Eq. 7 forever)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,6 +66,25 @@ class ServiceDone:
     node: int
     task: Task
     service_s: float
+
+
+@dataclasses.dataclass(frozen=True)
+class FeedbackTick:
+    """Periodic cloud-side recalibration instant (every ``update_period_s``).
+
+    The feedback stage fits every ready edge's Platt calibration in ONE
+    fused ``ops.calibrate_fleet`` launch and ships the parameters down the
+    WAN downlink as per-edge ``ModelUpdate`` events."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelUpdate:
+    """Recalibrated CQ confidence parameters arriving at ``edge`` over the
+    WAN downlink.  Applied at *delivery* time: ticks that fire while the
+    update is in flight still triage with the stale calibration — the same
+    race a real edge device lives with."""
+    edge: int
+    params: Tuple[float, float]       # Platt (a, b)
 
 
 class EventQueue:

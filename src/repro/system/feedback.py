@@ -1,0 +1,135 @@
+"""Cloud->edge feedback stage: online CQ confidence recalibration.
+
+This closes the loop the offline §IV-B training scheme leaves open at run
+time: every cloud (or peer-edge) re-classification verdict is an exact
+label for the edge confidence that escalated it, and throwing those labels
+away freezes each edge's confidence quality for the whole run.  Instead:
+
+  reclassify completes ──► per-edge (score, truth) ring buffer
+                                      │  every update_period_s
+                                      ▼
+                    ONE fused ``ops.calibrate_fleet`` launch
+                    (all ready edges' Platt fits, bucket-padded (E, N))
+                                      │  per-edge (a, b)
+                                      ▼
+                    WAN downlink (``Transport.wan_recv``, FIFO)
+                                      │  ModelUpdate at *delivery* time
+                                      ▼
+                    ``TriageStage.apply_update`` — later ticks triage on
+                    ``sigmoid(a * logit(conf) + b)``; in-flight ticks
+                    still ran on the stale calibration (the real race)
+
+Buffers are bounded deques (``feedback_window``): recency-windowed labels
+are what lets the fit *follow* concept drift instead of averaging it away.
+Edges with too few labels, or labels all one class, are skipped rather
+than shipped an identity that would overwrite a learned calibration.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Deque, Dict, List, Tuple
+
+import numpy as np
+
+from repro.kernels import ops
+from repro.serving.simulator import Item
+from repro.system.events import ModelUpdate
+from repro.system.scenario import Scenario
+from repro.system.transport import Transport
+
+IDENTITY = (1.0, 0.0)
+# must match kernels/calibrate.EPS: train-time and serve-time logit
+# features have to agree or the fit systematically misses near 0/1
+_EPS = 1e-4
+
+
+def apply_calibration(conf: np.ndarray, a: float, b: float) -> np.ndarray:
+    """``sigmoid(a * logit(conf) + b)`` — the Platt map the fused
+    calibration kernel fits.  The identity (1, 0) returns ``conf``
+    untouched (bit-exact, not just numerically close), so an uncalibrated
+    run is indistinguishable from one with the loop disabled."""
+    if (a, b) == IDENTITY:
+        return conf
+    c = np.clip(conf, _EPS, 1.0 - _EPS)
+    z = a * np.log(c / (1.0 - c)) + b
+    # numerically stable sigmoid: exp only ever sees non-positive z
+    out = np.empty_like(z)
+    pos = z >= 0
+    out[pos] = 1.0 / (1.0 + np.exp(-z[pos]))
+    ez = np.exp(z[~pos])
+    out[~pos] = ez / (1.0 + ez)
+    return out
+
+
+class FeedbackStage:
+    """Accumulates cloud-labeled escalations; emits fleet model updates."""
+
+    def __init__(self, sc: Scenario, transport: Transport):
+        self.sc = sc
+        self.transport = transport
+        # the loop needs a cascade (something to recalibrate) and a period
+        self.enabled = (sc.update_period_s is not None
+                        and sc.scheme in ("surveiledge", "surveiledge_fixed"))
+        self.buffers: Dict[int, Deque[Tuple[float, float, bool]]] = {
+            e: collections.deque(maxlen=sc.feedback_window)
+            for e in sc.edge_ids}
+        self.model_updates = 0        # fused calibrate launches (one/event)
+        self.labels_seen = 0
+
+    # --- label intake ---------------------------------------------------------
+    def observe(self, t: float, item: Item) -> None:
+        """One re-classification verdict at time ``t``: ground truth for
+        ``item``'s raw edge confidence, banked against its *home* edge
+        (whose CQ model produced the score, wherever the re-classification
+        actually ran)."""
+        if not self.enabled:
+            return
+        self.buffers[item.edge_device].append((t, item.conf, item.is_query))
+        self.labels_seen += 1
+
+    def _fresh(self, t: float, edge: int) -> List[Tuple[float, bool]]:
+        """This edge's labels young enough to describe the CURRENT score
+        distribution.  Labels age out after ``feedback_max_age_periods``
+        update periods: the count-bounded deque alone turns over at the
+        escalation rate, which under drift leaves the fit anchored to the
+        dead regime for most of a run."""
+        horizon = t - self.sc.feedback_max_age_periods * self.sc.update_period_s
+        return [(s, truth) for (ts, s, truth) in self.buffers[edge]
+                if ts >= horizon]
+
+    # --- one update event -----------------------------------------------------
+    def tick(self, t: float, dead: set) -> List[Tuple[float, ModelUpdate]]:
+        """Fit every ready edge in ONE fused launch and ship the results.
+
+        Ready = alive, with at least ``feedback_min_count`` fresh labels of
+        both classes (a single-class or tiny fit would ship noise over a
+        possibly learned calibration).  Returns ``[(delivery_time,
+        ModelUpdate), ...]`` — the caller pushes them onto the event queue
+        so calibration lands only when the WAN downlink delivers it."""
+        ready: List[Tuple[int, List[Tuple[float, bool]]]] = []
+        for e in sorted(self.buffers):
+            if e in dead:
+                continue
+            labels = self._fresh(t, e)
+            pos = sum(1 for _, truth in labels if truth)
+            if len(labels) >= self.sc.feedback_min_count \
+                    and 0 < pos < len(labels):
+                ready.append((e, labels))
+        if not ready:
+            return []
+        n = max(len(labels) for _, labels in ready)
+        scores = np.full((len(ready), n), -1.0, np.float32)
+        truths = np.zeros((len(ready), n), np.float32)
+        for i, (_, labels) in enumerate(ready):
+            scores[i, :len(labels)] = [s for s, _ in labels]
+            truths[i, :len(labels)] = [float(truth) for _, truth in labels]
+        params, _ = ops.calibrate_fleet(
+            scores, truths, min_count=self.sc.feedback_min_count)
+        params = np.asarray(params)
+        self.model_updates += 1
+        out = []
+        for i, (e, _) in enumerate(ready):
+            done = self.transport.wan_recv(t, self.sc.update_nbytes)
+            out.append((done, ModelUpdate(
+                e, (float(params[i, 0]), float(params[i, 1])))))
+        return out

@@ -42,6 +42,14 @@ class QueryReport:
     # render_s / framediff_s / classify_s) plus the engine's triage_s —
     # where a frames-to-answers run actually spent its compute
     stage_timings: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # --- feedback loop (cloud -> edge online recalibration) -------------------
+    downloaded_bytes: int = 0              # model updates over the downlink
+    model_updates: int = 0                 # fused calibrate launches (one
+    #                                        ops.calibrate_fleet per event)
+    # simulated seconds-on-the-wire per link family (transfer time belongs
+    # to transport, never to the node latency estimators)
+    wan_transfer_s: float = 0.0
+    lan_transfer_s: float = 0.0
 
     # --- accuracy -------------------------------------------------------------
     def f_score(self, lam: float = 2.0) -> float:
@@ -62,6 +70,32 @@ class QueryReport:
     def latency_var(self) -> float:
         return float(np.var(self.latencies)) if len(self.latencies) else 0.0
 
+    def accuracy_timeline(self, window_s: float = 10.0,
+                          lam: float = 2.0) -> List[Dict[str, float]]:
+        """Windowed F_lambda over finish time: ``[{t_start, n, f2}, ...]``.
+
+        This is how concept-drift recovery becomes visible: on
+        ``drifting_city`` the open-loop ablation's windows slump after
+        ``drift_at_s`` and stay down, while the closed loop's climb back
+        once the first post-drift ``ModelUpdate`` delivers.  Windows with
+        zero finished items are omitted (a NaN row would poison JSON
+        artifact consumers)."""
+        if not len(self.finish_times):
+            return []
+        out = []
+        n_win = int(np.floor(float(self.finish_times.max()) / window_s)) + 1
+        idx = np.minimum((self.finish_times // window_s).astype(int),
+                         n_win - 1)
+        for k in range(n_win):
+            m = idx == k
+            if not m.any():
+                continue
+            out.append({"t_start": round(k * window_s, 3),
+                        "n": int(m.sum()),
+                        "f2": round(_f_score(self.decisions[m],
+                                             self.truths[m], lam), 4)})
+        return out
+
     def summary(self) -> Dict[str, float]:
         """Flat row with the Tables II-IV column schema (+ harness extras)."""
         return {
@@ -72,6 +106,11 @@ class QueryReport:
             "latency_var": round(self.latency_var, 3),
             "bandwidth_MB": round(self.uploaded_bytes / 1e6, 2),
             "lan_MB": round(self.lan_bytes / 1e6, 2),
+            "downloaded_MB": round(self.downloaded_bytes / 1e6, 3),
+            # raw bytes too: the loader's updates-without-downlink gate
+            # must not be fooled by MB rounding on tiny payloads
+            "downloaded_bytes": self.downloaded_bytes,
+            "model_updates": self.model_updates,
             "escalated": self.escalated,
             "rerouted": self.rerouted,
             "kernel_launches": self.kernel_launches,

@@ -14,8 +14,12 @@ event loop:
                                      backlog for the cloud), node liveness
   nodes      repro.system.nodes      per-node deque queues, service state,
                                      failure bookkeeping
-  transport  repro.system.transport  shared-FIFO WAN uplink + dedicated
-                                     LAN links, byte accounting
+  transport  repro.system.transport  shared-FIFO WAN uplink + downlink,
+                                     dedicated LAN links, byte accounting
+  feedback   repro.system.feedback   cloud->edge learning loop: cloud
+                                     labels -> ONE fused calibrate launch
+                                     per update_period_s -> per-edge Platt
+                                     params over the WAN downlink
   metrics    repro.system.metrics    QueryReport
 
 Beyond-paper stress is first-class: scenarios may declare traffic bursts
@@ -38,12 +42,15 @@ from repro.system.events import (
     Arrive,
     EdgeFail,
     EventQueue,
+    FeedbackTick,
+    ModelUpdate,
     Sample,
     ServiceDone,
     Task,
     TickArrivals,
     Transfer,
 )
+from repro.system.feedback import FeedbackStage
 from repro.system.frontend import ConfidenceStreamFrontend, Frontend
 from repro.system.nodes import NodeBank
 from repro.system.scenario import Scenario
@@ -198,13 +205,17 @@ class QueryPipeline:
                     self._rerouted += 1
                     self._dispatch(t, edge, Task(it, "reclassify", None),
                                    count_escalated=False, exclude_src=True)
-        for edge, (routes, slots) in self.triage_stage.triage_tick(
+        for edge, (routes, slots, conf_used) in self.triage_stage.triage_tick(
                 live).items():
-            for it, route, slot in zip(live[edge], routes, slots):
+            for it, route, slot, cal in zip(live[edge], routes, slots,
+                                            conf_used):
                 if route == ESCALATE and slot >= 0:
                     decision = None                 # cloud-model's call
                 elif route == ESCALATE:             # capacity overflow:
-                    decision = it.conf > 0.5        # stays un-escalated
+                    # stays un-escalated; the edge decides with its LIVE
+                    # (calibrated) confidence, same value the kernel
+                    # routed on
+                    decision = bool(cal > 0.5)
                 else:
                     decision = route == ACCEPT
                 self._enqueue(t, edge, Task(it, "classify", decision))
@@ -233,11 +244,27 @@ class QueryPipeline:
         if node in self.nodes.dead:
             return                               # work was re-dispatched
         self.nodes.complete(node)
-        self.sched.on_complete(node, svc + task.tx_s)
+        # The estimator sees SERVICE time only.  Transfer time is the
+        # link's (Transport accumulates it); feeding it here would let one
+        # WAN burst permanently inflate the cloud's t_0 while wan_backlog
+        # separately charges the same congestion in Eq. 7 — double-counted.
+        # Reclassify observations on an edge run reclassify_factor x the CQ
+        # cost; normalize them so t_j stays a per-CQ-item estimate and a
+        # classify/reclassify mix cannot bias drain_time (Eqs. 7-9).
+        # (Known residual: Q_j * t_j prices a reclassify-laden queue in
+        # CQ units, underestimating its true drain; pricing per-phase
+        # queue composition is the fuller alternative the paper's Eq. 7
+        # doesn't model either.)
+        obs = svc
+        if task.phase == "reclassify" and node != CLOUD:
+            obs = svc / self.sc.reclassify_factor
+        self.sched.on_complete(node, obs)
         self.db.put(f"t{node}", self.sched.nodes[node].estimator.t)
         self.db.put(f"Q{node}", self.sched.nodes[node].queue_len)
         if task.phase == "reclassify":
-            # accurate model == ground truth (paper: ResNet-152)
+            # accurate model == ground truth (paper: ResNet-152) — and an
+            # exact label for the home edge's CQ score (feedback loop)
+            self.feedback.observe(t, task.item)
             self._finish(t, node, task.item, task.item.is_query)
         elif task.decision is None:              # escalate: ship onward
             self._dispatch(t, node, Task(task.item, "reclassify", None),
@@ -256,6 +283,7 @@ class QueryPipeline:
         self.transport = Transport(sc)
         self.nodes = NodeBank(sc, self.service_s, self.rng)
         self.triage_stage = TriageStage(sc, self.sched, self.transport)
+        self.feedback = FeedbackStage(sc, self.transport)
         self._lat: List[float] = []
         self._dec: List[bool] = []
         self._tru: List[bool] = []
@@ -281,6 +309,12 @@ class QueryPipeline:
             self.events.push(k * sc.interval_s, Sample())
         for t_fail, node in sc.failures:
             self.events.push(t_fail, EdgeFail(node))
+        if self.feedback.enabled:
+            horizon = n_ticks * sc.interval_s
+            k = 1
+            while k * sc.update_period_s <= horizon + 1e-9:
+                self.events.push(k * sc.update_period_s, FeedbackTick())
+                k += 1
 
         while self.events:
             t, ev = self.events.pop()
@@ -305,6 +339,14 @@ class QueryPipeline:
             elif isinstance(ev, EdgeFail):
                 if ev.node not in self.nodes.dead:
                     self._fail_node(t, ev.node)
+            elif isinstance(ev, FeedbackTick):
+                # one fused fleet recalibration launch; the per-edge
+                # results land as ModelUpdate events at downlink delivery
+                for done, update in self.feedback.tick(t, self.nodes.dead):
+                    self.events.push(done, update)
+            elif isinstance(ev, ModelUpdate):
+                if ev.edge not in self.nodes.dead:
+                    self.triage_stage.apply_update(ev.edge, ev.params)
             else:
                 assert isinstance(ev, ServiceDone), ev
                 self._on_done(t, ev.node, ev.task, ev.service_s)
@@ -318,6 +360,10 @@ class QueryPipeline:
             finish_times=np.asarray(self._fin),
             uploaded_bytes=self.transport.uploaded_bytes,
             lan_bytes=self.transport.lan_bytes,
+            downloaded_bytes=self.transport.downloaded_bytes,
+            model_updates=self.feedback.model_updates,
+            wan_transfer_s=self.transport.wan_transfer_s,
+            lan_transfer_s=self.transport.lan_transfer_s,
             escalated=self._escalated,
             rerouted=self._rerouted,
             kernel_launches=self.triage_stage.launches,

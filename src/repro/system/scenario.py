@@ -42,20 +42,68 @@ class Scenario:
     #                                          this home-edge drain time
     # --- links ---------------------------------------------------------------
     uplink_MBps: float = 0.5                 # shared WAN FIFO, edge -> cloud
+    downlink_MBps: float = 5.0               # shared WAN FIFO, cloud -> edge
     lan_MBps: float = 10.0                   # edge <-> edge, non-contending
     rtt_s: float = 0.1
     # --- cascade -------------------------------------------------------------
     escalation_capacity: int = 64            # per edge per tick (kernel buffer)
     fixed_thresholds: Optional[Tuple[float, float]] = None
+    # --- feedback loop (cloud -> edge online recalibration) ------------------
+    update_period_s: Optional[float] = None  # None disables the loop (the
+    #                                          ablation); else one fused
+    #                                          calibrate launch per period
+    update_nbytes: int = 64 * 1024           # per-edge downlink payload (the
+    #                                          recalibrated CQ head)
+    feedback_window: int = 256               # per-edge (score, truth) buffer
+    feedback_min_count: int = 8              # labels needed before fitting
+    feedback_max_age_periods: float = 2.0    # labels older than this many
+    #                                          update periods age out of the
+    #                                          fit (recency bounds staleness
+    #                                          under drift)
     # --- stress events -------------------------------------------------------
     burst_boost: Optional[float] = None      # override CameraSpec.busy_boost
     burst_rate: Optional[float] = None       # override CameraSpec.base_rate
     failures: Tuple[Tuple[float, int], ...] = ()   # (t_s, edge node id)
+    # concept drift: at drift_at_s the class-conditional Beta parameters of
+    # the synthetic confidence stream switch from (8,2)/(2,8) to drift_beta
+    # ((query_a, query_b), (other_a, other_b)).  The default is gain-style
+    # drift — query scores compress into the middle of the axis while
+    # clutter compresses low, so the classes STAY separable but the frozen
+    # thresholds (and the raw conf > 0.5 fallback cut) sit in the wrong
+    # place; a monotone recalibration can recover it, which is exactly what
+    # the feedback loop fits
+    drift_at_s: Optional[float] = None
+    drift_beta: Tuple[Tuple[float, float], Tuple[float, float]] = \
+        ((5.0, 5.0), (1.2, 12.0))
     # --- stream --------------------------------------------------------------
     seed: int = 0
     items: Optional[Sequence[Item]] = None   # injected pre-scored stream
     frame_hw: Optional[Tuple[int, int]] = None   # pixel path: camera frame
     #                                              size override (H, W)
+
+    def __post_init__(self):
+        # plain ValueError, never assert: `python -O` strips asserts, and a
+        # scenario with a bogus scheme or thresholds must fail loudly either
+        # way.  dataclasses.replace() re-runs this, so with_scheme and the
+        # ablation replaces are covered too.
+        if self.scheme not in SCHEMES:
+            raise ValueError(
+                f"scenario {self.name!r}: unknown scheme {self.scheme!r} "
+                f"(expected one of {SCHEMES})")
+        if self.fixed_thresholds is not None:
+            a, b = self.fixed_thresholds
+            if not 0.5 <= a <= 1.0:
+                raise ValueError(
+                    f"scenario {self.name!r}: fixed alpha={a} must satisfy "
+                    f"0.5 <= alpha <= 1 (Eq. 8 clamp)")
+            if not 0.0 <= b < 0.5:
+                raise ValueError(
+                    f"scenario {self.name!r}: fixed beta={b} must satisfy "
+                    f"0 <= beta < 0.5 (Eq. 9 range)")
+        if self.update_period_s is not None and self.update_period_s <= 0:
+            raise ValueError(
+                f"scenario {self.name!r}: update_period_s="
+                f"{self.update_period_s} must be positive (or None)")
 
     @property
     def num_edges(self) -> int:
@@ -66,7 +114,8 @@ class Scenario:
         return tuple(range(1, self.num_edges + 1))
 
     def with_scheme(self, scheme: str) -> "Scenario":
-        assert scheme in SCHEMES, scheme
+        """Same scenario under another query scheme (validated in
+        ``__post_init__`` — raises ``ValueError``, survives ``python -O``)."""
         return dataclasses.replace(self, scheme=scheme)
 
 
@@ -136,6 +185,14 @@ def synthetic_confidence_stream(sc: Scenario) -> List[Item]:
         conf = np.where(is_query, rng.beta(8, 2, n), rng.beta(2, 8, n))
         t_arr = np.repeat(ts, counts[:, j]) \
             + rng.uniform(0, sc.interval_s, n)
+        if sc.drift_at_s is not None:
+            # concept drift: items after drift_at_s draw from the drifted
+            # class-conditional Betas (drawn AFTER the stationary draws so
+            # drift-free scenarios keep bit-identical streams per seed)
+            (qa, qb), (oa, ob) = sc.drift_beta
+            drifted = np.where(is_query, rng.beta(qa, qb, n),
+                               rng.beta(oa, ob, n))
+            conf = np.where(t_arr >= sc.drift_at_s, drifted, conf)
         edge = cam.cam_id % sc.num_edges + 1
         items.extend(
             Item(t_arrival=float(t), camera=cam.cam_id, edge_device=edge,
@@ -216,6 +273,36 @@ def city_scale(num_cameras: int = 512, num_edges: int = 64,
                     **kw)
 
 
+def drifting_city(num_cameras: int = 12, num_edges: int = 4,
+                  **kw) -> Scenario:
+    """Concept drift mid-run: the edge CQ model's confidence distribution
+    decays a third of the way in (query scores slump toward the reject
+    band, clutter compresses low), so a frozen calibration starts silently
+    dropping true query objects below beta.
+
+    This is the feedback loop's measuring stick: by default the loop is ON
+    (``update_period_s`` set — every period the cloud fits all edges'
+    Platt recalibration in ONE fused ``ops.calibrate_fleet`` launch and
+    ships it down the WAN downlink); replace ``update_period_s=None`` for
+    the open-loop ablation, and compare ``accuracy_F2`` /
+    ``accuracy_timeline`` between the two (``examples/run_scenarios.py``
+    emits both rows automatically)."""
+    duration = kw.pop("duration_s", 90.0)
+    drift_at = kw.pop("drift_at_s", duration / 3.0)
+    update = kw.pop("update_period_s", 6.0)
+    speeds = tuple(1.0 if i % 2 == 0 else 0.5 for i in range(num_edges))
+    # operating point: compute is ample (fast service, shedding only in
+    # extremis) but the per-edge ESCALATION budget is tight, so the edge's
+    # own verdicts — the thing calibration improves — carry real weight
+    return Scenario(name="drifting_city", edge_speeds=speeds,
+                    num_cameras=num_cameras, duration_s=duration,
+                    burst_rate=kw.pop("burst_rate", 4.0),
+                    escalation_capacity=kw.pop("escalation_capacity", 3),
+                    edge_service_s=kw.pop("edge_service_s", 0.04),
+                    offload_drain_s=kw.pop("offload_drain_s", 8.0),
+                    drift_at_s=drift_at, update_period_s=update, **kw)
+
+
 def pixel_city(num_cameras: int = 12, num_edges: int = 4, **kw) -> Scenario:
     """Pixel-path operating point: the frames->query loop at a size the
     CPU-only interpret-mode kernels finish inside the CI smoke budget.
@@ -239,5 +326,6 @@ SCENARIOS: Dict[str, Callable[..., Scenario]] = {
     "bursty_crowds": bursty_crowds,
     "straggler_edge": straggler_edge,
     "city_scale": city_scale,
+    "drifting_city": drifting_city,
     "pixel_city": pixel_city,
 }

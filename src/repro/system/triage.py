@@ -4,7 +4,10 @@ Every scheduler tick, all live edges' detection batches are packed into one
 (E, N) confidence matrix (rows right-padded with -1.0, which always routes
 to 'reject') alongside the (E, 2) matrix of each edge's *current* adaptive
 thresholds, and triaged by a single ``ops.triage_fleet`` Pallas launch —
-the per-tick kernel-launch count is 1, not E.
+the per-tick kernel-launch count is 1, not E.  Before packing, each edge's
+raw confidences pass through its *live* Platt calibration (cloud->edge
+feedback loop, ``system/feedback.py``) — identity until the first
+``ModelUpdate`` delivers.
 
 Thresholds are per-edge state: each edge runs its own Eqs. 8-9 update,
 driven by the drain of "its chosen queue" — the busier of the edge's own
@@ -25,6 +28,7 @@ from repro.core.scheduler import CLOUD, Scheduler
 from repro.core.thresholds import ThresholdState
 from repro.kernels import ops
 from repro.serving.simulator import Item
+from repro.system.feedback import IDENTITY, apply_calibration
 from repro.system.scenario import Scenario
 from repro.system.transport import Transport
 
@@ -51,6 +55,10 @@ class TriageStage:
             proto = ThresholdState(gamma1_up=0.005)
         self.states: Dict[int, ThresholdState] = {
             e: proto for e in sc.edge_ids}
+        # per-edge live Platt calibration (a, b): identity until a
+        # ModelUpdate *delivers* over the WAN downlink (feedback loop)
+        self.calibrations: Dict[int, Tuple[float, float]] = {
+            e: IDENTITY for e in sc.edge_ids}
         self.launches = 0
         self.elapsed_s = 0.0         # wall clock inside triage_tick
 
@@ -79,12 +87,15 @@ class TriageStage:
 
     # --- the fused launch -----------------------------------------------------
     def triage_tick(self, batches: Dict[int, List[Item]]
-                    ) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
+                    ) -> Dict[int, Tuple[np.ndarray, np.ndarray, np.ndarray]]:
         """Triage every edge's tick batch in ONE kernel launch.
 
         ``batches`` maps live edge id -> that edge's items this tick.
-        Returns per-edge ``(routes, slots)`` arrays trimmed to the true
-        batch lengths."""
+        Returns per-edge ``(routes, slots, conf_used)`` arrays trimmed to
+        the true batch lengths — ``conf_used`` is the (calibrated)
+        confidence the kernel actually routed on, so downstream fallback
+        decisions (escalation-capacity overflow) judge with the edge's
+        live calibration, not the stale raw score."""
         if not batches:
             return {}
         t0 = time.perf_counter()
@@ -93,6 +104,12 @@ class TriageStage:
         conf = np.full((len(edges), max(lengths)), -1.0, np.float32)
         for i, e in enumerate(edges):
             conf[i, :lengths[i]] = [it.conf for it in batches[e]]
+            a, b = self.calibrations[e]
+            if (a, b) != IDENTITY:
+                # live recalibration from the cloud->edge feedback loop;
+                # pad lanes stay -1.0 (always 'reject', never a slot)
+                conf[i, :lengths[i]] = apply_calibration(
+                    conf[i, :lengths[i]], a, b)
         thresholds = np.asarray(
             [[self.states[e].alpha, self.states[e].beta] for e in edges],
             np.float32)
@@ -100,10 +117,16 @@ class TriageStage:
             conf, thresholds, capacity=self.sc.escalation_capacity)
         self.launches += 1
         routes, slots = np.asarray(routes), np.asarray(slots)
-        out = {e: (routes[i, :lengths[i]], slots[i, :lengths[i]])
+        out = {e: (routes[i, :lengths[i]], slots[i, :lengths[i]],
+                   conf[i, :lengths[i]])
                for i, e in enumerate(edges)}
         self.elapsed_s += time.perf_counter() - t0
         return out
+
+    def apply_update(self, edge: int, params: Tuple[float, float]) -> None:
+        """A ``ModelUpdate`` delivered: this edge triages later ticks with
+        the new Platt calibration (earlier ticks already ran stale)."""
+        self.calibrations[edge] = params
 
     def final_thresholds(self) -> Dict[int, Tuple[float, float]]:
         """Per-edge (alpha, beta) at end of run (reported for inspection)."""

@@ -6,6 +6,7 @@ import pytest
 
 from repro.core.scheduler import CLOUD, Scheduler
 from repro.kernels import ops, ref
+from repro.serving.simulator import Item
 from repro.system import (
     Scenario,
     run_query,
@@ -13,6 +14,8 @@ from repro.system import (
     straggler_edge,
     synthetic_confidence_stream,
 )
+from repro.system.events import Task
+from repro.system.pipeline import QueryPipeline
 
 # --- Eq. 7 scheduler edge cases ----------------------------------------------
 
@@ -57,6 +60,55 @@ def test_select_node_extra_cost_steers_away():
     # idle cloud would win the tie; an uplink-backlog charge flips it
     assert s.select_node() == CLOUD
     assert s.select_node(extra_cost={CLOUD: 10.0}) == 1
+
+
+# --- latency-estimator regressions (Eq. 7 inputs must stay unbiased) ---------
+
+
+def test_cloud_estimator_unbiased_by_wan_congestion():
+    """One WAN congestion burst must not inflate the cloud's t_0: transfer
+    time belongs to Transport (and Eq. 7's wan_backlog charge), never to
+    the node latency estimator.  Before the fix, svc + tx_s fed the
+    estimator and a saturated 0.05 MB/s uplink (~1 s per 49 KB crop)
+    dragged t_0 orders of magnitude above the true service time."""
+    sc = single_edge(num_cameras=6, duration_s=40.0, seed=3,
+                     uplink_MBps=0.05).with_scheme("surveiledge_fixed")
+    stream = synthetic_confidence_stream(sc)
+    p = QueryPipeline(sc)
+    r = p.run(stream)
+    assert r.escalated > 20                  # the uplink really was stressed
+    assert r.wan_transfer_s > 10.0           # ...and transport accounts it
+    cloud_svc = sc.edge_service_s / sc.cloud_speedup
+    est = p.sched.nodes[CLOUD].estimator
+    assert len(est._history) > 0
+    # the estimate converges to the true (jittered) service time, not to
+    # service + transfer
+    assert est.t < 3.0 * cloud_svc
+
+
+def test_edge_estimator_unbiased_by_reclassify_mix():
+    """An edge serving a classify/reclassify mix must still estimate the
+    per-CQ-item latency: reclassify observations run reclassify_factor x
+    slower and are normalized back, so drain_time (Eqs. 7-9) stays
+    anchored to the queue's base service rate."""
+    sc = Scenario(name="mix", edge_speeds=(1.0,), num_cameras=1,
+                  duration_s=5.0, reclassify_factor=4.0)
+    p = QueryPipeline(sc)
+    p.run([])                                # initialize run-scoped state
+    it = Item(t_arrival=0.0, camera=0, edge_device=1, conf=0.9,
+              is_query=True)
+    for k in range(300):
+        phase = "classify" if k % 2 == 0 else "reclassify"
+        task = Task(it, phase, True if phase == "classify" else None)
+        p.nodes.push(1, task)
+        p.sched.on_enqueue(1)
+        started, svc = p.nodes.begin(0.0, 1)
+        p._on_done(svc, 1, started, svc)
+    est = p.sched.nodes[1].estimator
+    # unbiased: ~1.0x the base CQ service time (lognormal jitter only);
+    # the pre-fix mixed estimate sat near (1 + factor)/2 = 2.5x
+    assert est.t < 1.5 * sc.edge_service_s
+    assert est.t > 0.6 * sc.edge_service_s
 
 
 # --- batched triage: capacity overflow ---------------------------------------
