@@ -26,12 +26,12 @@ endif
 	fi
 FORCE:
 
-.PHONY: test test-slow lint bench-smoke bench dev-deps
+.PHONY: test test-slow lint bench-smoke bench report-gate dev-deps
 
 test:            ## tier-1 test suite (the verify gate for every PR; excludes slow-marked tests)
 	$(PY) -m pytest -x -q -m "not slow" $(XDIST)
 
-test-slow:       ## pixel-path + hypothesis-heavy tests (dedicated non-blocking CI job)
+test-slow:       ## pixel-path + hypothesis-heavy tests (nightly-blocking, per-PR non-blocking CI job)
 	$(PY) -m pytest -q -m slow
 
 lint:            ## ruff check (CI blocks on this; skipped when ruff is absent)
@@ -41,12 +41,19 @@ lint:            ## ruff check (CI blocks on this; skipped when ruff is absent)
 	  echo "ruff not installed (run 'make dev-deps'); skipping lint"; \
 	fi
 
-bench-smoke:     ## fast end-to-end sanity; writes per-scenario JSON reports to reports/
-	$(PY) examples/run_scenarios.py --cameras 4 --duration 30 --json-out reports
-	$(PY) examples/run_scenarios.py --scenario city_scale --duration 20 --json-out reports
-	$(PY) examples/run_scenarios.py --scenario drifting_city --cameras 8 --duration 60 --json-out reports
-	$(PY) examples/run_scenarios.py --scenario pixel_city --frontend pixel --duration 10 --json-out reports
+# One process for every preset (`--scenario all` embeds the per-scenario
+# smoke overrides incl. the pixel frontend for pixel_city) instead of five
+# sequential interpreters each paying import + jit warmup.  Writes INTO
+# reports/ — this is how the committed baselines are (re)blessed.
+bench-smoke:     ## fast end-to-end sanity; regenerates per-scenario JSON baselines in reports/
+	$(PY) examples/run_scenarios.py --scenario all --cameras 4 --duration 30 --json-out reports
 	$(PY) examples/quickstart.py
+
+REPORT_FRESH := .cache/reports-fresh
+report-gate:     ## regenerate all scenario reports into a scratch dir and diff against committed reports/ baselines (tolerance bands; fails on breach)
+	rm -rf $(REPORT_FRESH)
+	$(PY) examples/run_scenarios.py --scenario all --cameras 4 --duration 30 --json-out $(REPORT_FRESH)
+	$(PY) benchmarks/report_gate.py --fresh $(REPORT_FRESH) --baseline reports
 
 bench:           ## full paper tables/figures (fine-tunes the workload; slow)
 	$(PY) -m benchmarks.run

@@ -64,6 +64,19 @@ def run(verbose: bool = True):
     rows.append(("triage_fleet_pallas_interp",
                  _time(ops.triage_fleet, fleet_conf, fleet_th, capacity=64),
                  bytes_fleet))
+    # multi-query fleet: 3 live CQs x 64 edges x 512-wide buckets, the
+    # whole (Q, E, N) tick in ONE Q*E-row-folded launch — vs Q per-query
+    # fleet launches (the loop a naive multi-query port would run)
+    Qn = 3
+    mq_conf = jax.random.uniform(jax.random.PRNGKey(13), (Qn, E, N))
+    mq_th = jnp.tile(fleet_th[None], (Qn, 1, 1))
+    bytes_mq = Qn * E * N * 4 * 3 + Qn * E * 2 * 4
+    rows.append(("triage_fleet_qen_ref",
+                 _time(ops.triage_fleet, mq_conf, mq_th, capacity=64,
+                       use_pallas=False), bytes_mq))
+    rows.append(("triage_fleet_qen_pallas_interp",
+                 _time(ops.triage_fleet, mq_conf, mq_th, capacity=64),
+                 bytes_mq))
     # fleet recalibration: one fused (E, N) Platt-fit launch per update
     # event — the feedback loop's whole fleet in ONE call (vs E per-edge
     # fits).  The NumPy ref is a per-row float64 Newton loop, so here the
@@ -108,17 +121,37 @@ def run(verbose: bool = True):
                     n=3, use_pallas=False)
     us_fleet = _time(ops.triage_fleet, fleet_conf, fleet_th, capacity=64,
                      n=3, use_pallas=False)
+    # ... and the query axis: ONE fused (Q, E, N) launch vs Q (E, N)
+    # fleet launches per tick (multi-query runtime's hot-path claim)
+    def _per_query_tick(conf, th, use_pallas=True):
+        return [ops.triage_fleet(conf[q], th[q], capacity=64,
+                                 use_pallas=use_pallas)
+                for q in range(conf.shape[0])]
+
+    us_qloop = _time(_per_query_tick, mq_conf, mq_th, n=3, use_pallas=False)
+    us_qfused = _time(ops.triage_fleet, mq_conf, mq_th, capacity=64,
+                      n=3, use_pallas=False)
     derived = {
         "fleet_launches_per_tick": 1,
         "per_edge_launches_per_tick": E,
         "fleet_launch_reduction": E,
         "fleet_tick_speedup_vs_per_edge_loop": round(us_loop / us_fleet, 2),
+        "multi_query_launches_per_tick": 1,
+        "per_query_launches_per_tick": Qn,
+        "multi_query_launch_reduction": Qn,
+        "multi_query_tick_speedup_vs_per_query_loop": round(
+            us_qloop / us_qfused, 2),
     }
     if verbose:
         print(f"fleet tick (E={E}, N={N}): 1 launch {us_fleet:.1f} us vs "
               f"{E}-launch loop {us_loop:.1f} us -> "
               f"{derived['fleet_tick_speedup_vs_per_edge_loop']}x, "
               f"{E}x fewer launches")
+        print(f"multi-query tick (Q={Qn}, E={E}, N={N}): 1 fused launch "
+              f"{us_qfused:.1f} us vs {Qn}-launch per-query loop "
+              f"{us_qloop:.1f} us -> "
+              f"{derived['multi_query_tick_speedup_vs_per_query_loop']}x, "
+              f"{Qn}x fewer launches")
     # frontend throughput, fig5-style scheme comparison: the full pixel path
     # (render -> framediff -> crops -> CQ scores) vs the model-free
     # confidence stream on the same small scenario, in detections/s.  The

@@ -1,0 +1,170 @@
+"""Regression gate over the scenario JSON reports: diff fresh runs
+against the committed ``reports/`` baselines with tolerance bands.
+
+CI's ``e2e-smoke`` used to only *upload* the per-scenario reports — a
+silent accuracy or bandwidth regression sailed through as a green build
+with a quietly different artifact.  This gate makes the reports load-
+bearing: ``make report-gate`` regenerates every scenario into a scratch
+dir (one process, ``run_scenarios.py --scenario all``) and fails the job
+on any breach of:
+
+  * ``accuracy_F2`` — within +/-0.05 ABSOLUTE of the baseline
+  * bandwidth (``bandwidth_MB`` / ``lan_MB`` / ``downloaded_MB``) and
+    latency (``avg_latency_s`` / ``p99_latency_s``) — within 25%
+    relative (plus a small absolute floor so near-zero baselines don't
+    flag on noise)
+  * per-query rows (multi-query scenarios): each query's ``f2`` and
+    ``avg_latency_s``, same bands
+  * structure — a fresh report missing a baseline scenario/scheme/query
+    (or vice versa) is a breach: new scenarios ship WITH their committed
+    baselines, retired ones delete them
+
+The simulation is seed-deterministic, so on an unchanged tree fresh ==
+baseline exactly; the bands exist to absorb *intentional* small behavior
+drift (a re-tuned threshold constant) without re-blessing every digit.
+A genuine change beyond the bands is re-blessed by regenerating the
+baselines in place (``make bench-smoke`` writes into ``reports/``) and
+committing the diff — which the PR reviewer then sees as numbers, not as
+a silently mutated artifact.
+
+  PYTHONPATH=src python benchmarks/report_gate.py --fresh .cache/reports-fresh
+  PYTHONPATH=src python benchmarks/report_gate.py --fresh DIR --baseline reports
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import Dict, List, Tuple
+
+# metric -> (kind, band, absolute floor for relative bands)
+TOLERANCES: Dict[str, Tuple[str, float, float]] = {
+    "accuracy_F2": ("abs", 0.05, 0.0),
+    "avg_latency_s": ("rel", 0.25, 0.05),
+    "p99_latency_s": ("rel", 0.25, 0.10),
+    "bandwidth_MB": ("rel", 0.25, 0.05),
+    "lan_MB": ("rel", 0.25, 0.05),
+    "downloaded_MB": ("rel", 0.25, 0.05),
+}
+PER_QUERY_TOLERANCES: Dict[str, Tuple[str, float, float]] = {
+    "f2": ("abs", 0.05, 0.0),
+    "avg_latency_s": ("rel", 0.25, 0.10),
+}
+
+
+def _check(metric: str, base: float, fresh: float,
+           spec: Tuple[str, float, float]) -> str:
+    """One metric against its band; returns a breach message or ''."""
+    kind, band, floor = spec
+    if kind == "abs":
+        tol = band
+    else:
+        tol = max(band * abs(base), floor)
+    if abs(fresh - base) > tol:
+        return (f"{metric}: fresh={fresh} vs baseline={base} "
+                f"(|delta|={abs(fresh - base):.4g} > tol={tol:.4g} "
+                f"[{kind} {band}])")
+    return ""
+
+
+def compare_rows(base: dict, fresh: dict,
+                 tolerances: Dict[str, Tuple[str, float, float]]
+                 ) -> List[str]:
+    """Diff one scheme (or per-query) row; missing metrics are breaches."""
+    out = []
+    for metric, spec in tolerances.items():
+        if metric not in base:
+            continue                  # older baseline without the column
+        if metric not in fresh:
+            out.append(f"{metric}: missing from fresh report")
+            continue
+        msg = _check(metric, float(base[metric]), float(fresh[metric]), spec)
+        if msg:
+            out.append(msg)
+    return out
+
+
+def compare_report(baseline: dict, fresh: dict) -> List[str]:
+    """All breaches between one scenario's baseline and fresh report."""
+    breaches: List[str] = []
+    name = baseline.get("scenario", "?")
+    b_schemes = baseline.get("schemes", {})
+    f_schemes = fresh.get("schemes", {})
+    for scheme in sorted(set(b_schemes) | set(f_schemes)):
+        tag = f"{name}/{scheme}"
+        if scheme not in f_schemes:
+            breaches.append(f"{tag}: scheme missing from fresh report")
+            continue
+        if scheme not in b_schemes:
+            breaches.append(f"{tag}: scheme has no committed baseline "
+                            f"(regenerate reports/ and commit)")
+            continue
+        b_row, f_row = b_schemes[scheme], f_schemes[scheme]
+        breaches.extend(f"{tag}: {m}"
+                        for m in compare_rows(b_row, f_row, TOLERANCES))
+        b_q = b_row.get("queries", {})
+        f_q = f_row.get("queries", {})
+        for q in sorted(set(b_q) | set(f_q)):
+            qtag = f"{tag}/q{q}"
+            if q not in f_q:
+                breaches.append(f"{qtag}: query missing from fresh report")
+            elif q not in b_q:
+                breaches.append(f"{qtag}: query has no committed baseline")
+            else:
+                breaches.extend(
+                    f"{qtag}: {m}" for m in
+                    compare_rows(b_q[q], f_q[q], PER_QUERY_TOLERANCES))
+    return breaches
+
+
+def gate(fresh_dir: str, baseline_dir: str) -> List[str]:
+    """Diff every ``*.json`` pairwise by filename; structural gaps breach."""
+    base_files = {os.path.basename(p)
+                  for p in glob.glob(os.path.join(baseline_dir, "*.json"))}
+    fresh_files = {os.path.basename(p)
+                   for p in glob.glob(os.path.join(fresh_dir, "*.json"))}
+    breaches: List[str] = []
+    for fn in sorted(base_files - fresh_files):
+        breaches.append(f"{fn}: committed baseline has no fresh run "
+                        f"(scenario dropped? delete the stale baseline)")
+    for fn in sorted(fresh_files - base_files):
+        breaches.append(f"{fn}: fresh report has no committed baseline "
+                        f"(new scenario? run `make bench-smoke` and commit "
+                        f"reports/{fn})")
+    for fn in sorted(base_files & fresh_files):
+        with open(os.path.join(baseline_dir, fn)) as fh:
+            base = json.load(fh)
+        with open(os.path.join(fresh_dir, fn)) as fh:
+            fresh = json.load(fh)
+        breaches.extend(compare_report(base, fresh))
+    return breaches
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", required=True,
+                    help="directory of freshly generated scenario reports")
+    ap.add_argument("--baseline", default="reports",
+                    help="directory of committed baselines (default: "
+                         "reports/)")
+    args = ap.parse_args()
+    if not glob.glob(os.path.join(args.fresh, "*.json")):
+        print(f"report-gate: no fresh reports in {args.fresh}",
+              file=sys.stderr)
+        return 2
+    breaches = gate(args.fresh, args.baseline)
+    if breaches:
+        print(f"report-gate: {len(breaches)} breach(es) vs "
+              f"{args.baseline}/:", file=sys.stderr)
+        for b in breaches:
+            print(f"  BREACH {b}", file=sys.stderr)
+        return 1
+    n = len(glob.glob(os.path.join(args.fresh, "*.json")))
+    print(f"report-gate: {n} report(s) within tolerance of {args.baseline}/")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

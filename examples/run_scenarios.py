@@ -7,21 +7,27 @@ the loop); ``--frontend pixel`` runs the paper's full pixel path instead
 scores).  For the CQ-model-scored workload, see
 ``benchmarks/table2_single_edge.py`` etc.
 
-Scenarios with the cloud->edge feedback loop enabled (``update_period_s``
-set, e.g. ``drifting_city``) additionally run the open-loop ablation
-(``update_period_s=None``) as a fifth ``surveiledge_no_update`` row, so
-one report carries the closed-vs-open comparison — including the windowed
-``accuracy_timeline`` that makes post-drift recovery visible.
+``--scenario all`` runs EVERY registered preset in this one process —
+each with its designated frontend and smoke-sized overrides (the
+``SMOKE_OVERRIDES`` table below) — so ``make bench-smoke`` and CI pay one
+interpreter/jit warmup instead of five.  Scenarios with the cloud->edge
+feedback loop enabled (``update_period_s`` set) additionally run the
+open-loop ablation (``update_period_s=None``) as a fifth
+``surveiledge_no_update`` row; multi-query scenarios add per-query rows
+(``queries``) to the JSON so the Fig. 5 training-scheme trade is visible
+per query.
 
 ``--json-out DIR`` writes one ``<scenario>-<frontend>.json`` report per
-scenario (the CI smoke job uploads these as build artifacts) and fails the
-run if any metric comes back NaN, the pipeline answered zero items, or a
-row is internally inconsistent (``model_updates > 0`` with zero downlink
-bytes means the loop "ran" without shipping anything — a broken report
-must fail loudly, not upload quietly).  ``load_report`` applies the same
-consistency gate when reading an artifact back.
+scenario (CI diffs these against the committed ``reports/`` baselines via
+``benchmarks/report_gate.py``) and fails the run if any metric comes back
+NaN, the pipeline answered zero items, or a row is internally
+inconsistent (``model_updates > 0`` with zero downlink bytes means the
+loop "ran" without shipping anything — a broken report must fail loudly,
+not upload quietly).  ``load_report`` applies the same consistency gate
+when reading an artifact back.
 
   PYTHONPATH=src python examples/run_scenarios.py
+  PYTHONPATH=src python examples/run_scenarios.py --scenario all --json-out reports
   PYTHONPATH=src python examples/run_scenarios.py --scenario drifting_city
   PYTHONPATH=src python examples/run_scenarios.py \
       --scenario pixel_city --frontend pixel --json-out reports
@@ -42,6 +48,19 @@ from repro.system import (  # noqa: E402
     run_query,
     synthetic_confidence_stream,
 )
+
+# ``--scenario all``: every preset in one process, each at its smoke-sized
+# operating point (keys override the CLI defaults; ``frontend`` picks the
+# pixel path where the scenario exists to exercise it).  These are also
+# exactly the settings the committed ``reports/`` baselines are built
+# from, so the report gate compares like with like.
+SMOKE_OVERRIDES = {
+    "city_scale": dict(duration=20.0),
+    "drifting_city": dict(cameras=8, duration=60.0),
+    "multi_query_city": dict(cameras=8, duration=60.0),
+    "query_churn": dict(cameras=8, duration=60.0),
+    "pixel_city": dict(frontend="pixel", duration=10.0),
+}
 
 
 def check_consistency(name: str, scheme: str, summary: dict) -> None:
@@ -89,10 +108,80 @@ def load_report(path: str) -> dict:
     return doc
 
 
+def run_scenario(name: str, frontend_name: str, cameras: int,
+                 duration: float, seed: int, json_out: str = None) -> None:
+    """Simulate one scenario under every scheme (+ ablation rows); print
+    the table and optionally write/validate its JSON artifact."""
+    sc = SCENARIOS[name](num_cameras=cameras, duration_s=duration, seed=seed)
+    frontend = PixelFrontend(seed=seed) if frontend_name == "pixel" else None
+    if frontend is not None:
+        stream = frontend.stream(sc)         # cached across the scheme sweep
+    else:
+        stream = synthetic_confidence_stream(sc)
+    print(f"\n== {name} [{frontend_name}] — {len(stream)} detections, "
+          f"{sc.num_edges} edge(s) + cloud, {len(sc.query_ids)} "
+          f"quer{'y' if len(sc.query_ids) == 1 else 'ies'} ==")
+    print(f"{'scheme':22s}{'F2':>8s}{'avg_lat':>9s}{'p99':>9s}"
+          f"{'WAN_MB':>8s}{'LAN_MB':>8s}{'DL_MB':>7s}{'upd':>5s}"
+          f"{'escal':>7s}{'rerouted':>9s}{'launches':>9s}{'l/tick':>7s}")
+    # the feedback loop's ablation rides along as a fifth row wherever
+    # the loop is enabled: same stream, update_period_s=None
+    variants = [(s, sc.with_scheme(s)) for s in SCHEMES]
+    if sc.update_period_s is not None:
+        variants.append(("surveiledge_no_update", dataclasses.replace(
+            sc.with_scheme("surveiledge"), update_period_s=None)))
+    per_scheme = {}
+    for label, variant in variants:
+        if frontend is not None:
+            r = run_query(variant, frontend=frontend)
+        else:
+            r = run_query(variant, items=stream)
+        if json_out:
+            validate(name, label, r)
+        s = r.summary()
+        per_scheme[label] = {
+            **s, "n_items": len(r.latencies),
+            "accuracy_timeline": r.accuracy_timeline(),
+            "stage_timings": {k: round(v, 4)
+                              for k, v in r.stage_timings.items()}}
+        if r.queries:
+            # per-query rows: the runtime Fig. 5 trade (train_s vs f2 vs
+            # head-of-query latency), one dict per live query
+            per_scheme[label]["queries"] = {
+                str(q): row for q, row in r.per_query_summary().items()}
+        print(f"{label:22s}{s['accuracy_F2']:8.3f}"
+              f"{s['avg_latency_s']:9.3f}{s['p99_latency_s']:9.3f}"
+              f"{s['bandwidth_MB']:8.2f}{s['lan_MB']:8.2f}"
+              f"{s['downloaded_MB']:7.2f}{s['model_updates']:5d}"
+              f"{s['escalated']:7d}{s['rerouted']:9d}"
+              f"{s['kernel_launches']:9d}"
+              f"{s['launches_per_tick']:7.2f}")
+        if r.queries and label == "surveiledge":
+            for q, row in sorted(r.per_query_summary().items()):
+                print(f"   q{q} [{row.get('train_scheme', '?'):>12s}]"
+                      f"{row['f2']:8.3f}{row['avg_latency_s']:9.3f}"
+                      f"  train {row.get('train_s', 0.0):6.2f}s"
+                      f"  deferred {row.get('deferred', 0):4d}"
+                      f"  n {row['n_items']}")
+    if json_out:
+        os.makedirs(json_out, exist_ok=True)
+        path = os.path.join(json_out, f"{name}-{frontend_name}.json")
+        with open(path, "w") as fh:
+            json.dump({"scenario": name, "frontend": frontend_name,
+                       "n_detections": len(stream),
+                       "num_edges": sc.num_edges,
+                       "schemes": per_scheme}, fh, indent=2)
+        load_report(path)            # round-trip the consistency gate
+        print(f"   -> {path}")
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--scenario", choices=sorted(SCENARIOS), default=None,
-                    help="run just one scenario (default: all)")
+    ap.add_argument("--scenario", choices=sorted(SCENARIOS) + ["all"],
+                    default=None,
+                    help="run just one scenario, or 'all' for every preset "
+                         "in one process with per-scenario smoke overrides "
+                         "(default: the small-fleet sweep)")
     ap.add_argument("--frontend", choices=("confidence", "pixel"),
                     default="confidence",
                     help="detection stream: model-free confidence synthesis "
@@ -105,65 +194,27 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    if args.scenario == "all":
+        # every preset, one process: per-scenario frontend + smoke-sized
+        # overrides from SMOKE_OVERRIDES, CLI values as the fallback
+        for name in sorted(SCENARIOS):
+            ov = SMOKE_OVERRIDES.get(name, {})
+            run_scenario(name,
+                         ov.get("frontend", args.frontend),
+                         ov.get("cameras", args.cameras),
+                         ov.get("duration", args.duration),
+                         args.seed, args.json_out)
+        return
     if args.scenario:
         names = [args.scenario]
     else:
         # city_scale pins 64 edges / 512 cameras regardless of --cameras;
-        # the default sweep stays small-fleet (run it explicitly, as
-        # `make bench-smoke` does)
+        # the default sweep stays small-fleet (run it explicitly, or via
+        # `--scenario all` as `make bench-smoke` does)
         names = [n for n in sorted(SCENARIOS) if n != "city_scale"]
-    frontend = PixelFrontend(seed=args.seed) \
-        if args.frontend == "pixel" else None
     for name in names:
-        sc = SCENARIOS[name](num_cameras=args.cameras,
-                             duration_s=args.duration, seed=args.seed)
-        if frontend is not None:
-            stream = frontend.stream(sc)     # cached across the scheme sweep
-        else:
-            stream = synthetic_confidence_stream(sc)
-        print(f"\n== {name} [{args.frontend}] — {len(stream)} detections, "
-              f"{sc.num_edges} edge(s) + cloud ==")
-        print(f"{'scheme':22s}{'F2':>8s}{'avg_lat':>9s}{'p99':>9s}"
-              f"{'WAN_MB':>8s}{'LAN_MB':>8s}{'DL_MB':>7s}{'upd':>5s}"
-              f"{'escal':>7s}{'rerouted':>9s}{'launches':>9s}{'l/tick':>7s}")
-        # the feedback loop's ablation rides along as a fifth row wherever
-        # the loop is enabled: same stream, update_period_s=None
-        variants = [(s, sc.with_scheme(s)) for s in SCHEMES]
-        if sc.update_period_s is not None:
-            variants.append(("surveiledge_no_update", dataclasses.replace(
-                sc.with_scheme("surveiledge"), update_period_s=None)))
-        per_scheme = {}
-        for label, variant in variants:
-            if frontend is not None:
-                r = run_query(variant, frontend=frontend)
-            else:
-                r = run_query(variant, items=stream)
-            if args.json_out:
-                validate(name, label, r)
-            s = r.summary()
-            per_scheme[label] = {
-                **s, "n_items": len(r.latencies),
-                "accuracy_timeline": r.accuracy_timeline(),
-                "stage_timings": {k: round(v, 4)
-                                  for k, v in r.stage_timings.items()}}
-            print(f"{label:22s}{s['accuracy_F2']:8.3f}"
-                  f"{s['avg_latency_s']:9.3f}{s['p99_latency_s']:9.3f}"
-                  f"{s['bandwidth_MB']:8.2f}{s['lan_MB']:8.2f}"
-                  f"{s['downloaded_MB']:7.2f}{s['model_updates']:5d}"
-                  f"{s['escalated']:7d}{s['rerouted']:9d}"
-                  f"{s['kernel_launches']:9d}"
-                  f"{s['launches_per_tick']:7.2f}")
-        if args.json_out:
-            os.makedirs(args.json_out, exist_ok=True)
-            path = os.path.join(args.json_out,
-                                f"{name}-{args.frontend}.json")
-            with open(path, "w") as fh:
-                json.dump({"scenario": name, "frontend": args.frontend,
-                           "n_detections": len(stream),
-                           "num_edges": sc.num_edges,
-                           "schemes": per_scheme}, fh, indent=2)
-            load_report(path)            # round-trip the consistency gate
-            print(f"   -> {path}")
+        run_scenario(name, args.frontend, args.cameras, args.duration,
+                     args.seed, args.json_out)
 
 
 if __name__ == "__main__":

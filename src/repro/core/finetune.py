@@ -109,6 +109,36 @@ def pretrain_backbone(cfg: ModelConfig, key: jax.Array,
     return res.params
 
 
+# Fig. 5 training-step budget shared by the real trainer (`run_scheme`
+# below) and the runtime cost model (`scheme_train_time`): both express the
+# same scheme trade — SurveilEdge fits ONE cluster model in `FIG5_STEPS`
+# steps, All-Fine-tune fits one model PER CAMERA (the ~num_cameras-x
+# slower upper bound), No-Fine-tune trains nothing.
+FIG5_STEPS = 40
+FIG5_SCHEMES = ("surveiledge", "all_finetune", "no_finetune")
+
+
+def scheme_train_time(scheme: str, num_cameras: int, *,
+                      step_s: float = 0.05) -> float:
+    """Simulated cloud seconds to fine-tune one CQ model under ``scheme``.
+
+    This is the Fig. 5 trade as an analytic cost the runtime query
+    lifecycle charges on arrival (``system/queries.py``): ``step_s`` is
+    the cloud's per-optimizer-step wall clock, and the step counts mirror
+    ``run_scheme`` exactly — measured training time for the real trainer
+    lives in ``benchmarks/fig5_training_schemes.py``.
+    """
+    if scheme == "no_finetune":
+        return 0.0
+    if scheme == "surveiledge":
+        return FIG5_STEPS * step_s
+    if scheme == "all_finetune":
+        return FIG5_STEPS * step_s * max(int(num_cameras), 1)
+    raise ValueError(
+        f"unknown Fig. 5 training scheme {scheme!r} "
+        f"(expected one of {FIG5_SCHEMES})")
+
+
 def run_scheme(scheme: str,
                cfg: ModelConfig,
                pretrained: Any,
@@ -121,12 +151,12 @@ def run_scheme(scheme: str,
         return {-1: FinetuneResult(pretrained, 0, 0.0, float("nan"), acc)}
     if scheme == "surveiledge":
         res = finetune(cfg, pretrained, cluster_iter_fn(),
-                       steps=40, lr=5e-4, eval_set=eval_set)
+                       steps=FIG5_STEPS, lr=5e-4, eval_set=eval_set)
         return {-1: res}
     if scheme == "all_finetune":
         out = {}
         for cam, it_fn in camera_iter_fns.items():
             out[cam] = finetune(cfg, pretrained, it_fn(),
-                                steps=40, lr=5e-4, eval_set=eval_set)
+                                steps=FIG5_STEPS, lr=5e-4, eval_set=eval_set)
         return out
     raise ValueError(scheme)

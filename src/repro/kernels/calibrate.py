@@ -21,10 +21,13 @@ fit; pad edge rows are fully masked and therefore come back as identity.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.runtime import resolve_interpret
 
 # Score clipping before the logit transform.  apply_calibration on the
 # numpy side MUST use the same epsilon so train-time and serve-time
@@ -98,9 +101,10 @@ def _calibrate_kernel(scores_ref, truths_ref, params_ref, count_ref, *,
 
 def calibrate_fleet_pallas(scores: jax.Array, truths: jax.Array, *,
                            iters: int, min_count: int,
-                           interpret: bool = True):
+                           interpret: Optional[bool] = None):
     """scores (E, N) f32 (pad lanes -1.0), truths (E, N) f32 {0, 1} ->
     (params (E, 2) f32 [a, b], counts (E,) i32 valid labels per edge)."""
+    interpret = resolve_interpret(interpret)
     E, N = scores.shape
     kernel = functools.partial(_calibrate_kernel, iters=iters,
                                min_count=min_count)

@@ -16,10 +16,13 @@ from __future__ import annotations
 
 import functools
 import math
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.runtime import resolve_interpret
 
 NEG_INF = -1e30
 
@@ -71,11 +74,12 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *,
 def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
                            causal: bool = True,
                            block_q: int = 128, block_k: int = 128,
-                           interpret: bool = True) -> jax.Array:
+                           interpret: Optional[bool] = None) -> jax.Array:
     """q: (B,H,Sq,hd); k/v: (B,KV,Sk,hd) with H % KV == 0.  -> (B,H,Sq,hd).
 
     Sq % block_q == 0 and Sk % block_k == 0 (ops.py pads).
     """
+    interpret = resolve_interpret(interpret)
     B, H, Sq, hd = q.shape
     KV, Sk = k.shape[1], k.shape[2]
     assert H % KV == 0 and Sq % block_q == 0 and Sk % block_k == 0

@@ -11,10 +11,13 @@ Target: TPU (compiled); validated on CPU with interpret=True against
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.runtime import resolve_interpret
 
 # (8, 128)-aligned VMEM tile; 3 channels live in the same block.
 BLOCK_H = 32
@@ -35,11 +38,12 @@ def _framediff_kernel(f0_ref, f1_ref, f2_ref, out_ref, *,
 
 def framediff_pallas(f0: jax.Array, f1: jax.Array, f2: jax.Array, *,
                      threshold: int, maxval: int = 255,
-                     interpret: bool = True) -> jax.Array:
+                     interpret: Optional[bool] = None) -> jax.Array:
     """(B, H, W, 3) int32 frames -> (B, H, W) int32 binary mask.
 
     H must be a multiple of BLOCK_H and W of BLOCK_W (ops.py pads).
     """
+    interpret = resolve_interpret(interpret)
     B, H, W, C = f0.shape
     assert C == 3 and H % BLOCK_H == 0 and W % BLOCK_W == 0, (f0.shape,)
     grid = (B, H // BLOCK_H, W // BLOCK_W)

@@ -8,10 +8,13 @@ VREG shifts, no re-loads, exactly how a TPU stencil wants to run.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.runtime import resolve_interpret
 
 BAND_H = 32        # output rows per band
 
@@ -31,8 +34,9 @@ def _morph_kernel(xb_ref, out_ref, *, op: str):
 
 
 def _morph_pallas(x: jax.Array, *, op: str, fill: int,
-                  interpret: bool = True) -> jax.Array:
+                  interpret: Optional[bool] = None) -> jax.Array:
     """(B, H, W) int32 -> (B, H, W); 3x3 max/min with `fill` padding."""
+    interpret = resolve_interpret(interpret)
     B, H, W = x.shape
     assert H % BAND_H == 0, (H, BAND_H)
     nb = H // BAND_H
@@ -55,10 +59,10 @@ def _morph_pallas(x: jax.Array, *, op: str, fill: int,
     return out.reshape(B, H, W)
 
 
-def dilate3x3_pallas(x: jax.Array, interpret: bool = True) -> jax.Array:
+def dilate3x3_pallas(x: jax.Array, interpret: Optional[bool] = None) -> jax.Array:
     return _morph_pallas(x, op="max", fill=0, interpret=interpret)
 
 
 def erode3x3_pallas(x: jax.Array, maxval: int = 255,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: Optional[bool] = None) -> jax.Array:
     return _morph_pallas(x, op="min", fill=maxval, interpret=interpret)

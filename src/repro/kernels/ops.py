@@ -1,12 +1,15 @@
 """Jit'd public wrappers for the Pallas kernels (padding, dtype, dispatch).
 
-``interpret`` defaults to True because this container is CPU-only; on a real
-TPU runtime set REPRO_PALLAS_INTERPRET=0 to compile the kernels.
+Interpret mode is a single repo-wide switch (``repro.kernels.runtime``,
+env knob ``REPRO_PALLAS_INTERPRET``): it defaults ON because this
+container is CPU-only; on a real TPU runtime ``REPRO_PALLAS_INTERPRET=0``
+flips every launch in the repo to compiled — no per-kernel defaults to
+chase.  The wrappers here never pass ``interpret`` explicitly; each
+launcher resolves the knob itself.
 """
 from __future__ import annotations
 
 import functools
-import os
 from typing import Tuple
 
 import jax
@@ -19,8 +22,7 @@ from repro.kernels import framediff as _fd
 from repro.kernels import morphology as _mo
 from repro.kernels import triage as _tr
 from repro.kernels import ref as _ref
-
-INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+from repro.kernels.runtime import interpret_default  # noqa: F401  (re-export)
 
 
 def _pad_hw(x: jax.Array, mh: int, mw: int, value=0) -> Tuple[jax.Array, int, int]:
@@ -45,7 +47,7 @@ def framediff(f0: jax.Array, f1: jax.Array, f2: jax.Array, *,
     f1p, _, _ = _pad_hw(f1, _fd.BLOCK_H, _fd.BLOCK_W)
     f2p, _, _ = _pad_hw(f2, _fd.BLOCK_H, _fd.BLOCK_W)
     out = _fd.framediff_pallas(f0p, f1p, f2p, threshold=threshold,
-                               maxval=maxval, interpret=INTERPRET)
+                               maxval=maxval)
     return out[:, :H, :W]
 
 
@@ -55,7 +57,7 @@ def dilate3x3(x: jax.Array, use_pallas: bool = True) -> jax.Array:
     if not use_pallas:
         return _ref.dilate3x3_ref(x)
     xp, H, W = _pad_hw(x, _mo.BAND_H, 1)
-    return _mo.dilate3x3_pallas(xp, interpret=INTERPRET)[:, :H, :W]
+    return _mo.dilate3x3_pallas(xp)[:, :H, :W]
 
 
 @functools.partial(jax.jit, static_argnames=("maxval", "use_pallas"))
@@ -64,7 +66,7 @@ def erode3x3(x: jax.Array, maxval: int = 255, use_pallas: bool = True) -> jax.Ar
     if not use_pallas:
         return _ref.erode3x3_ref(x, maxval)
     xp, H, W = _pad_hw(x, _mo.BAND_H, 1, value=maxval)
-    return _mo.erode3x3_pallas(xp, maxval=maxval, interpret=INTERPRET)[:, :H, :W]
+    return _mo.erode3x3_pallas(xp, maxval=maxval)[:, :H, :W]
 
 
 @functools.partial(jax.jit,
@@ -93,8 +95,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     vp = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0))) if pk else v
     out = _fa.flash_attention_pallas(qp, kp, vp, causal=causal,
                                      block_q=min(block_q, qp.shape[2]),
-                                     block_k=min(block_k, kp.shape[2]),
-                                     interpret=INTERPRET)
+                                     block_k=min(block_k, kp.shape[2]))
     return out[:, :, :Sq]
 
 
@@ -107,7 +108,7 @@ def triage(conf: jax.Array, *, alpha: float, beta: float, capacity: int,
     if not use_pallas:
         return _ref.triage_ref(conf, alpha, beta, capacity)
     routes, slots, count = _tr.triage_pallas(
-        conf, alpha=alpha, beta=beta, capacity=capacity, interpret=INTERPRET)
+        conf, alpha=alpha, beta=beta, capacity=capacity)
     return routes, slots, count[0]
 
 
@@ -117,7 +118,7 @@ def _triage_dynamic(conf: jax.Array, thresholds: jax.Array, *, capacity: int,
     if not use_pallas:
         return _ref.triage_ref(conf, thresholds[0], thresholds[1], capacity)
     routes, slots, count = _tr.triage_dynamic_pallas(
-        conf, thresholds, capacity=capacity, interpret=INTERPRET)
+        conf, thresholds, capacity=capacity)
     return routes, slots, count[0]
 
 
@@ -172,29 +173,65 @@ def _triage_fleet(conf: jax.Array, thresholds: jax.Array, *, capacity: int,
                   use_pallas: bool = True):
     if not use_pallas:
         return _ref.triage_fleet_ref(conf, thresholds, capacity)
-    return _tr.triage_fleet_pallas(conf, thresholds, capacity=capacity,
-                                   interpret=INTERPRET)
+    return _tr.triage_fleet_pallas(conf, thresholds, capacity=capacity)
+
+
+def _bucket_q(q: int) -> int:
+    """Power-of-two bucket for the query axis, minimum 1.
+
+    The query axis stays tiny (a handful of live CQs), so unlike the edge
+    and camera axes it gets no minimum-8 floor: a single-query run pays
+    zero padding and folds to exactly the (E, N) layout it had before the
+    query axis existed."""
+    return 1 if q <= 1 else 1 << (q - 1).bit_length()
 
 
 def triage_fleet(conf: jax.Array, thresholds: jax.Array, *, capacity: int,
                  use_pallas: bool = True):
-    """Whole-fleet per-tick triage: ONE kernel launch for every edge.
+    """Whole-fleet per-tick triage: ONE kernel launch for every edge —
+    and, with a query axis, for every live query on every edge.
 
-    ``conf`` is the (E, N) tick matrix — row e holds edge e's detections
-    this scheduler tick, right-padded with -1.0 where edges saw fewer than
-    N — and ``thresholds`` the (E, 2) per-edge runtime [alpha, beta] from
-    each edge's own Eqs. 8-9 state.  Returns (routes (E, N), slots (E, N),
-    counts (E,)); compaction and the ``capacity`` clamp are per edge row.
+    2D: ``conf`` is the (E, N) tick matrix — row e holds edge e's
+    detections this scheduler tick, right-padded with -1.0 where edges saw
+    fewer than N — and ``thresholds`` the (E, 2) per-edge runtime
+    [alpha, beta] from each edge's own Eqs. 8-9 state.  Returns (routes
+    (E, N), slots (E, N), counts (E,)); compaction and the ``capacity``
+    clamp are per edge row.
 
-    Both axes are padded up to power-of-two buckets (min 8) before the
-    launch so a run's stream of tick matrices hits a handful of cached
-    compilations, then the pads are sliced back off.  Pad lanes use
+    3D: ``conf`` (Q, E, N) with ``thresholds`` (Q, E, 2) — one row per
+    (live query, edge) pair, each with its OWN Eqs. 8-9 threshold state
+    and its own escalation buffer.  The query axis is bucket-padded to a
+    power of two (pad rows: conf=-1.0, thresholds (1, 0) — inert exactly
+    like pad edge rows), then Q·E-row-folded onto the 2D layout, so ALL
+    live queries across ALL edges still cost ONE launch per scheduler
+    tick; outputs come back (Q, E, N)/(Q, E).  Per-row compaction is
+    unchanged by the fold — each (query, edge) keeps a private buffer.
+
+    Both trailing axes are padded up to power-of-two buckets (min 8)
+    before the launch so a run's stream of tick matrices hits a handful of
+    cached compilations, then the pads are sliced back off.  Pad lanes use
     conf=-1.0, which always routes to 'reject' (beta >= 0) and therefore
     can never claim an escalation slot or count; pad edge rows get
     thresholds (1, 0) for the same reason.
     """
     conf = jnp.asarray(conf, jnp.float32)
     thresholds = jnp.asarray(thresholds, jnp.float32)
+    if conf.ndim == 3:
+        Q, E, n = conf.shape
+        qb = _bucket_q(Q)
+        if qb != Q:
+            conf = jnp.pad(conf, ((0, qb - Q), (0, 0), (0, 0)),
+                           constant_values=-1.0)
+            thresholds = jnp.concatenate(
+                [thresholds,
+                 jnp.tile(jnp.asarray([[[1.0, 0.0]]], jnp.float32),
+                          (qb - Q, E, 1))])
+        routes, slots, counts = triage_fleet(
+            conf.reshape(qb * E, n), thresholds.reshape(qb * E, 2),
+            capacity=capacity, use_pallas=use_pallas)
+        return (jnp.reshape(routes, (qb, E, n))[:Q],
+                jnp.reshape(slots, (qb, E, n))[:Q],
+                jnp.reshape(counts, (qb, E))[:Q])
     E, n = conf.shape
     eb, nb = _bucket(E), _bucket(n)
     if nb != n:
@@ -213,8 +250,7 @@ def triage_fleet(conf: jax.Array, thresholds: jax.Array, *, capacity: int,
 def _calibrate_fleet_pallas(scores: jax.Array, truths: jax.Array, *,
                             iters: int, min_count: int):
     return _ca.calibrate_fleet_pallas(scores, truths, iters=iters,
-                                      min_count=min_count,
-                                      interpret=INTERPRET)
+                                      min_count=min_count)
 
 
 def calibrate_fleet(scores, truths, *, iters: int = 8, min_count: int = 8,
@@ -228,15 +264,34 @@ def calibrate_fleet(scores, truths, *, iters: int = 8, min_count: int = 8,
     (E,) valid labels per edge).  Rows with fewer than ``min_count``
     labels, or labels all one class, come back as the identity (1, 0).
 
-    Both axes are padded up to power-of-two buckets (min 8) before the
-    launch — the same jit-cache contract as ``triage_fleet`` — then the
-    pads are sliced back off.  Pad lanes use score=-1.0 and are masked out
-    of every reduction; pad edge rows are fully masked and therefore fit
-    to the identity.  The ``use_pallas=False`` path dispatches to the
-    independent NumPy oracle (``ref.calibrate_fleet_ref``) outside jit.
+    3D: ``scores``/``truths`` (Q, E, N) — one row per (live query, edge)
+    pair, query-axis bucket-padded then Q·E-row-folded onto the 2D layout
+    (pad rows fully masked, fit to the identity), so a multi-query fleet's
+    whole recalibration is still ONE launch per update event; ``params``
+    comes back (Q, E, 2) and ``counts`` (Q, E).
+
+    Both trailing axes are padded up to power-of-two buckets (min 8)
+    before the launch — the same jit-cache contract as ``triage_fleet`` —
+    then the pads are sliced back off.  Pad lanes use score=-1.0 and are
+    masked out of every reduction; pad edge rows are fully masked and
+    therefore fit to the identity.  The ``use_pallas=False`` path
+    dispatches to the independent NumPy oracle
+    (``ref.calibrate_fleet_ref``) outside jit.
     """
     scores = jnp.asarray(scores, jnp.float32)
     truths = jnp.asarray(truths, jnp.float32)
+    if scores.ndim == 3:
+        Q, E, n = scores.shape
+        qb = _bucket_q(Q)
+        if qb != Q:
+            scores = jnp.pad(scores, ((0, qb - Q), (0, 0), (0, 0)),
+                             constant_values=-1.0)
+            truths = jnp.pad(truths, ((0, qb - Q), (0, 0), (0, 0)))
+        params, counts = calibrate_fleet(
+            scores.reshape(qb * E, n), truths.reshape(qb * E, n),
+            iters=iters, min_count=min_count, use_pallas=use_pallas)
+        return (jnp.reshape(jnp.asarray(params), (qb, E, 2))[:Q],
+                jnp.reshape(jnp.asarray(counts), (qb, E))[:Q])
     E, n = scores.shape
     eb, nb = _bucket(E), _bucket(n)
     if nb != n:

@@ -90,20 +90,23 @@ def triage_ref(conf: jax.Array, alpha: float, beta: float,
 
 def triage_fleet_ref(conf: jax.Array, thresholds: jax.Array,
                      capacity: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Per-edge triage over the whole fleet's tick matrix.
+    """Per-row triage over the whole fleet's tick matrix.
 
-    conf (E, N) f32, thresholds (E, 2) f32 [alpha, beta] per edge ->
-    routes (E, N) int32, slots (E, N) int32 (per-row stable compaction,
-    each edge's escalation buffer capped at ``capacity``), counts (E,) int32.
+    conf (..., N) f32 with thresholds (..., 2) f32 [alpha, beta] per row ->
+    routes (..., N) int32, slots (..., N) int32 (per-row stable compaction,
+    each row's escalation buffer capped at ``capacity``), counts (...,)
+    int32.  The leading axes are arbitrary: (E, N) for the single-query
+    fleet, (Q, E, N) for the multi-query fleet — every (query, edge) pair
+    is an independent row with its own thresholds and its own buffer.
     """
-    alpha = thresholds[:, 0:1]
-    beta = thresholds[:, 1:2]
+    alpha = thresholds[..., 0:1]
+    beta = thresholds[..., 1:2]
     routes = jnp.where(conf > alpha, 0,
                        jnp.where(conf < beta, 1, 2)).astype(jnp.int32)
     esc = routes == 2
-    pos = jnp.cumsum(esc.astype(jnp.int32), axis=1) - 1
+    pos = jnp.cumsum(esc.astype(jnp.int32), axis=-1) - 1
     slots = jnp.where(esc & (pos < capacity), pos, -1).astype(jnp.int32)
-    return routes, slots, jnp.sum(esc.astype(jnp.int32), axis=1)
+    return routes, slots, jnp.sum(esc.astype(jnp.int32), axis=-1)
 
 
 def calibrate_fleet_ref(scores: np.ndarray, truths: np.ndarray,
@@ -114,12 +117,20 @@ def calibrate_fleet_ref(scores: np.ndarray, truths: np.ndarray,
     Deliberately an *independent* implementation (float64, explicit per-row
     Newton loop) so the parity test checks the numerics, not the layout:
     scores (E, N) with pad lanes -1.0, truths (E, N) {0, 1} ->
-    (params (E, 2) [a, b], counts (E,) valid labels).  Constants (clip
-    epsilon, ridge, clamps) mirror ``kernels/calibrate.py``.
+    (params (E, 2) [a, b], counts (E,) valid labels).  A (Q, E, N) input
+    folds its leading axes to Q·E independent rows — same contract as the
+    fused kernel's query axis — and returns (Q, E, 2)/(Q, E).  Constants
+    (clip epsilon, ridge, clamps) mirror ``kernels/calibrate.py``.
     """
     from repro.kernels.calibrate import A_MAX, A_MIN, B_MAX, EPS, PRIOR
     scores = np.asarray(scores, np.float64)
     truths = np.asarray(truths, np.float64)
+    if scores.ndim == 3:
+        lead = scores.shape[:2]
+        params, counts = calibrate_fleet_ref(
+            scores.reshape(-1, scores.shape[-1]),
+            truths.reshape(-1, truths.shape[-1]), iters, min_count)
+        return params.reshape(*lead, 2), counts.reshape(lead)
     E = scores.shape[0]
     params = np.tile(np.asarray([1.0, 0.0]), (E, 1))
     counts = np.zeros(E, np.int32)

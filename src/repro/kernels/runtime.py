@@ -1,0 +1,33 @@
+"""Single interpret-mode switch for every Pallas launch in the repo.
+
+Every kernel module used to hardcode ``interpret: bool = True`` in its
+launcher signature, which meant a TPU run had to touch each call site to
+compile anything.  Instead, launchers now default to ``interpret=None``
+and resolve the effective mode here: the ``REPRO_PALLAS_INTERPRET`` env
+knob (default ON — this container is CPU-only and CI runs the kernels in
+interpret mode) flips every launch in the repo to compiled in one place:
+
+    REPRO_PALLAS_INTERPRET=0 python -m pytest ...      # TPU: compile all
+
+Passing an explicit ``interpret=`` to any launcher still wins — tests that
+pin a mode stay pinned.  The env var is read per resolution call, so it
+must be set before the first trace of a given shape (jit caches bake the
+mode into the compiled artifact; flipping mid-process only affects
+not-yet-traced shapes).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+ENV_KNOB = "REPRO_PALLAS_INTERPRET"
+
+
+def interpret_default() -> bool:
+    """The repo-wide interpret mode: ON unless ``REPRO_PALLAS_INTERPRET=0``."""
+    return os.environ.get(ENV_KNOB, "1") != "0"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """An explicit per-call ``interpret=`` wins; ``None`` means the knob."""
+    return interpret_default() if interpret is None else bool(interpret)

@@ -18,10 +18,13 @@ Two granularities share one kernel body:
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.runtime import resolve_interpret
 
 
 def _triage_dyn_kernel(conf_ref, ab_ref, routes_ref, slots_ref, count_ref, *,
@@ -46,9 +49,10 @@ def _triage_dyn_kernel(conf_ref, ab_ref, routes_ref, slots_ref, count_ref, *,
 
 
 def triage_dynamic_pallas(conf: jax.Array, thresholds: jax.Array, *,
-                          capacity: int, interpret: bool = True):
+                          capacity: int, interpret: Optional[bool] = None):
     """conf (N,) f32, thresholds (2,) f32 [alpha, beta] ->
     (routes (N,) i32, slots (N,) i32, count (1,) i32)."""
+    interpret = resolve_interpret(interpret)
     (N,) = conf.shape
     kernel = functools.partial(_triage_dyn_kernel, capacity=capacity)
     return pl.pallas_call(
@@ -66,7 +70,7 @@ def triage_dynamic_pallas(conf: jax.Array, thresholds: jax.Array, *,
 
 
 def triage_pallas(conf: jax.Array, *, alpha: float, beta: float,
-                  capacity: int, interpret: bool = True):
+                  capacity: int, interpret: Optional[bool] = None):
     """conf (N,) f32 -> (routes (N,) i32, slots (N,) i32, count (1,) i32).
 
     Static-threshold convenience wrapper: packs alpha/beta into the dynamic
@@ -105,9 +109,10 @@ def _triage_fleet_kernel(conf_ref, ab_ref, routes_ref, slots_ref, count_ref,
 
 
 def triage_fleet_pallas(conf: jax.Array, thresholds: jax.Array, *,
-                        capacity: int, interpret: bool = True):
+                        capacity: int, interpret: Optional[bool] = None):
     """conf (E, N) f32, thresholds (E, 2) f32 [alpha, beta] per edge ->
     (routes (E, N) i32, slots (E, N) i32, counts (E,) i32)."""
+    interpret = resolve_interpret(interpret)
     E, N = conf.shape
     kernel = functools.partial(_triage_fleet_kernel, capacity=capacity)
     return pl.pallas_call(

@@ -39,6 +39,7 @@ class Item:
     conf: float               # edge-model confidence (precomputed)
     is_query: bool            # ground truth
     nbytes: int = 3 * 128 * 128  # crop payload (~49 KB, 128x128 RGB)
+    query: int = 0            # which continuous query (CQ) scored this crop
 
 
 @dataclasses.dataclass

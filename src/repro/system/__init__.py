@@ -17,6 +17,7 @@ from repro.system.frontend import ConfidenceStreamFrontend, Frontend
 from repro.system.metrics import QueryReport
 from repro.system.pipeline import QueryPipeline, run_query
 from repro.system.pixel_frontend import PixelFrontend
+from repro.system.queries import DEFAULT_QUERY, QuerySet, QuerySpec
 from repro.system.scenario import (
     SCENARIOS,
     SCHEMES,
@@ -27,7 +28,9 @@ from repro.system.scenario import (
     frame_schedule,
     heterogeneous_multi_edge,
     homogeneous_multi_edge,
+    multi_query_city,
     pixel_city,
+    query_churn,
     scenario_cameras,
     single_edge,
     straggler_edge,
@@ -36,11 +39,14 @@ from repro.system.scenario import (
 
 __all__ = [
     "ConfidenceStreamFrontend",
+    "DEFAULT_QUERY",
     "FeedbackStage",
     "Frontend",
     "PixelFrontend",
     "QueryPipeline",
     "QueryReport",
+    "QuerySet",
+    "QuerySpec",
     "SCENARIOS",
     "SCHEMES",
     "Scenario",
@@ -51,7 +57,9 @@ __all__ = [
     "frame_schedule",
     "heterogeneous_multi_edge",
     "homogeneous_multi_edge",
+    "multi_query_city",
     "pixel_city",
+    "query_churn",
     "run_query",
     "scenario_cameras",
     "single_edge",

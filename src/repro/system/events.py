@@ -17,7 +17,11 @@ from repro.serving.simulator import Item
 
 @dataclasses.dataclass
 class Task:
-    """One item travelling through the pipeline."""
+    """One item travelling through the pipeline.
+
+    The item's ``query`` rides along on the ``Item`` itself — routing and
+    service are query-agnostic (the Eq. 7 allocator prices a node by its
+    total load across every live query sharing it)."""
     item: Item
     phase: str                    # 'classify' (CQ) or 'reclassify' (accurate)
     decision: Optional[bool]      # set for classify tasks at triage time
@@ -72,19 +76,68 @@ class ServiceDone:
 class FeedbackTick:
     """Periodic cloud-side recalibration instant (every ``update_period_s``).
 
-    The feedback stage fits every ready edge's Platt calibration in ONE
-    fused ``ops.calibrate_fleet`` launch and ships the parameters down the
-    WAN downlink as per-edge ``ModelUpdate`` events."""
+    The feedback stage fits every ready (query, edge) row's Platt
+    calibration in ONE fused ``ops.calibrate_fleet`` launch and ships the
+    parameters down the WAN downlink as per-row ``ModelUpdate`` events."""
 
 
 @dataclasses.dataclass(frozen=True)
 class ModelUpdate:
-    """Recalibrated CQ confidence parameters arriving at ``edge`` over the
-    WAN downlink.  Applied at *delivery* time: ticks that fire while the
-    update is in flight still triage with the stale calibration — the same
-    race a real edge device lives with."""
+    """A per-query CQ model artifact arriving at ``edge`` over the WAN
+    downlink.  Two kinds share the stale-in-flight delivery semantics:
+
+    * ``kind="calibration"`` — recalibrated Platt ``params`` for the
+      (query, edge) CQ confidence (the online feedback loop).
+    * ``kind="weights"`` — the freshly fine-tuned CQ model itself (§IV-B):
+      the edge starts serving the query only once this delivers; the
+      query's detections wait in the edge's deferral buffer until then.
+
+    Applied at *delivery* time: ticks that fire while the update is in
+    flight still triage with the stale model/calibration — the same race a
+    real edge device lives with."""
     edge: int
-    params: Tuple[float, float]       # Platt (a, b)
+    params: Optional[Tuple[float, float]]     # Platt (a, b); None for weights
+    query: int = 0
+    kind: str = "calibration"                 # or "weights"
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryArrival:
+    """A new continuous query (CQ) enters the system: the cloud starts its
+    Fig. 5 fine-tune (``core.finetune.scheme_train_time``) the instant this
+    fires; ``TrainDone`` follows after the scheme's training time."""
+    query: int
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainDone:
+    """The cloud finished fine-tuning ``query``'s CQ model: per-edge weight
+    shipments start on the WAN downlink (one ``ModelUpdate(kind="weights")``
+    per live edge, FIFO-serialized like every other downlink transfer)."""
+    query: int
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryRetire:
+    """``query`` leaves the system: its per-(query, edge) threshold rows
+    drop out of the fused triage launch (freeing edge escalation capacity),
+    its feedback buffers are cleared, and detections still waiting for its
+    weights are answered with the pre-trained prior.  Escalations already
+    in flight complete and are counted — retirement never loses answers."""
+    query: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ReleaseTick:
+    """Deferred-item release barrier at a scheduler-tick boundary.
+
+    When a query's CQ weights deliver at an edge mid-tick, the items that
+    were waiting are NOT triaged immediately (that would cost an extra
+    kernel launch): they join the next tick boundary.  A natural
+    ``TickArrivals`` at the same boundary absorbs them first (setup-time
+    events win FIFO tie-breaks), keeping the one-launch-per-tick
+    invariant; this event only launches if that tick had no arrivals of
+    its own."""
 
 
 class EventQueue:

@@ -5,12 +5,14 @@ time: every cloud (or peer-edge) re-classification verdict is an exact
 label for the edge confidence that escalated it, and throwing those labels
 away freezes each edge's confidence quality for the whole run.  Instead:
 
-  reclassify completes ──► per-edge (score, truth) ring buffer
+  reclassify completes ──► per-(query, edge) (score, truth) ring buffer
                                       │  every update_period_s
                                       ▼
                     ONE fused ``ops.calibrate_fleet`` launch
-                    (all ready edges' Platt fits, bucket-padded (E, N))
-                                      │  per-edge (a, b)
+                    (all ready (query, edge) rows' Platt fits, row-folded
+                    and bucket-padded exactly like the triage kernel's
+                    query axis)
+                                      │  per-row (a, b)
                                       ▼
                     WAN downlink (``Transport.wan_recv``, FIFO)
                                       │  ModelUpdate at *delivery* time
@@ -21,13 +23,14 @@ away freezes each edge's confidence quality for the whole run.  Instead:
 
 Buffers are bounded deques (``feedback_window``): recency-windowed labels
 are what lets the fit *follow* concept drift instead of averaging it away.
-Edges with too few labels, or labels all one class, are skipped rather
-than shipped an identity that would overwrite a learned calibration.
+Rows with too few labels, or labels all one class, are skipped rather
+than shipped an identity that would overwrite a learned calibration; a
+retired query's buffers are cleared and its rows never fit again.
 """
 from __future__ import annotations
 
 import collections
-from typing import Deque, Dict, List, Tuple
+from typing import Deque, Dict, FrozenSet, List, Set, Tuple, Union
 
 import numpy as np
 
@@ -70,51 +73,66 @@ class FeedbackStage:
         # the loop needs a cascade (something to recalibrate) and a period
         self.enabled = (sc.update_period_s is not None
                         and sc.scheme in ("surveiledge", "surveiledge_fixed"))
-        self.buffers: Dict[int, Deque[Tuple[float, float, bool]]] = {
-            e: collections.deque(maxlen=sc.feedback_window)
-            for e in sc.edge_ids}
+        self.buffers: Dict[Tuple[int, int],
+                           Deque[Tuple[float, float, bool]]] = {
+            (q, e): collections.deque(maxlen=sc.feedback_window)
+            for q in sc.query_ids for e in sc.edge_ids}
         self.model_updates = 0        # fused calibrate launches (one/event)
         self.labels_seen = 0
 
     # --- label intake ---------------------------------------------------------
     def observe(self, t: float, item: Item) -> None:
         """One re-classification verdict at time ``t``: ground truth for
-        ``item``'s raw edge confidence, banked against its *home* edge
-        (whose CQ model produced the score, wherever the re-classification
-        actually ran)."""
+        ``item``'s raw edge confidence, banked against its query's row on
+        its *home* edge (whose CQ model produced the score, wherever the
+        re-classification actually ran)."""
         if not self.enabled:
             return
-        self.buffers[item.edge_device].append((t, item.conf, item.is_query))
+        self.buffers[(item.query, item.edge_device)].append(
+            (t, item.conf, item.is_query))
         self.labels_seen += 1
 
-    def _fresh(self, t: float, edge: int) -> List[Tuple[float, bool]]:
-        """This edge's labels young enough to describe the CURRENT score
-        distribution.  Labels age out after ``feedback_max_age_periods``
-        update periods: the count-bounded deque alone turns over at the
-        escalation rate, which under drift leaves the fit anchored to the
-        dead regime for most of a run."""
+    def retire_query(self, query: int) -> None:
+        """A retired query's labels describe a model nobody serves anymore:
+        clear its buffers so its rows never re-enter the fused fit."""
+        for key, buf in self.buffers.items():
+            if key[0] == query:
+                buf.clear()
+
+    def _fresh(self, t: float, key: Tuple[int, int]
+               ) -> List[Tuple[float, bool]]:
+        """This (query, edge) row's labels young enough to describe the
+        CURRENT score distribution.  Labels age out after
+        ``feedback_max_age_periods`` update periods: the count-bounded
+        deque alone turns over at the escalation rate, which under drift
+        leaves the fit anchored to the dead regime for most of a run."""
         horizon = t - self.sc.feedback_max_age_periods * self.sc.update_period_s
-        return [(s, truth) for (ts, s, truth) in self.buffers[edge]
+        return [(s, truth) for (ts, s, truth) in self.buffers[key]
                 if ts >= horizon]
 
     # --- one update event -----------------------------------------------------
-    def tick(self, t: float, dead: set) -> List[Tuple[float, ModelUpdate]]:
-        """Fit every ready edge in ONE fused launch and ship the results.
+    def tick(self, t: float, dead: set,
+             retired: Union[Set[int], FrozenSet[int]] = frozenset()
+             ) -> List[Tuple[float, ModelUpdate]]:
+        """Fit every ready (query, edge) row in ONE fused launch and ship
+        the results.
 
-        Ready = alive, with at least ``feedback_min_count`` fresh labels of
-        both classes (a single-class or tiny fit would ship noise over a
-        possibly learned calibration).  Returns ``[(delivery_time,
-        ModelUpdate), ...]`` — the caller pushes them onto the event queue
-        so calibration lands only when the WAN downlink delivers it."""
-        ready: List[Tuple[int, List[Tuple[float, bool]]]] = []
-        for e in sorted(self.buffers):
-            if e in dead:
+        Ready = live query on a live edge, with at least
+        ``feedback_min_count`` fresh labels of both classes (a single-class
+        or tiny fit would ship noise over a possibly learned calibration).
+        Returns ``[(delivery_time, ModelUpdate), ...]`` — the caller pushes
+        them onto the event queue so calibration lands only when the WAN
+        downlink delivers it."""
+        ready: List[Tuple[Tuple[int, int], List[Tuple[float, bool]]]] = []
+        for key in sorted(self.buffers):
+            q, e = key
+            if e in dead or q in retired:
                 continue
-            labels = self._fresh(t, e)
+            labels = self._fresh(t, key)
             pos = sum(1 for _, truth in labels if truth)
             if len(labels) >= self.sc.feedback_min_count \
                     and 0 < pos < len(labels):
-                ready.append((e, labels))
+                ready.append((key, labels))
         if not ready:
             return []
         n = max(len(labels) for _, labels in ready)
@@ -123,13 +141,16 @@ class FeedbackStage:
         for i, (_, labels) in enumerate(ready):
             scores[i, :len(labels)] = [s for s, _ in labels]
             truths[i, :len(labels)] = [float(truth) for _, truth in labels]
+        # the ready rows are already (query, edge)-folded — the same Q·E
+        # row-folding the kernel's 3D entry point performs itself
         params, _ = ops.calibrate_fleet(
             scores, truths, min_count=self.sc.feedback_min_count)
         params = np.asarray(params)
         self.model_updates += 1
         out = []
-        for i, (e, _) in enumerate(ready):
+        for i, ((q, e), _) in enumerate(ready):
             done = self.transport.wan_recv(t, self.sc.update_nbytes)
             out.append((done, ModelUpdate(
-                e, (float(params[i, 0]), float(params[i, 1])))))
+                e, (float(params[i, 0]), float(params[i, 1])),
+                query=q, kind="calibration")))
         return out

@@ -42,6 +42,17 @@ class QueryReport:
     # render_s / framediff_s / classify_s) plus the engine's triage_s —
     # where a frames-to-answers run actually spent its compute
     stage_timings: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # --- runtime query lifecycle ----------------------------------------------
+    # per-item query id aligned with latencies/decisions/truths (all zeros
+    # for implicit single-query runs)
+    query_ids: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int64))
+    # query -> lifecycle facts from the pipeline (train_scheme, train_s,
+    # t_arrive_s, t_retire_s, deferred, live_edges, thresholds); empty for
+    # implicit single-query runs
+    queries: Dict[int, Dict] = dataclasses.field(default_factory=dict)
+    cloud_train_s: float = 0.0             # total Fig. 5 fine-tune seconds
+    #                                        charged on the cloud node
     # --- feedback loop (cloud -> edge online recalibration) -------------------
     downloaded_bytes: int = 0              # model updates over the downlink
     model_updates: int = 0                 # fused calibrate launches (one
@@ -96,6 +107,39 @@ class QueryReport:
                                              self.truths[m], lam), 4)})
         return out
 
+    def per_query_summary(self, lam: float = 2.0) -> Dict[int, Dict]:
+        """One row per query: accuracy/latency over ITS items, merged with
+        the lifecycle facts the pipeline recorded (Fig. 5 train_scheme and
+        train_s, arrival/retire instants, items deferred while its weights
+        were training/in flight).
+
+        This is where the Fig. 5 trade becomes legible at run time: an
+        ``all_finetune`` query shows the largest ``train_s`` and the worst
+        head-of-query latency (its early detections waited out the
+        fine-tune), a ``no_finetune`` query shows ``train_s == 0`` but the
+        lowest ``f2``."""
+        qids = self.query_ids if len(self.query_ids) else \
+            np.zeros(len(self.latencies), np.int64)
+        out: Dict[int, Dict] = {}
+        known = set(self.queries) | set(np.unique(qids[:len(self.latencies)])
+                                        if len(self.latencies) else [])
+        for q in sorted(int(q) for q in known):
+            m = qids == q
+            n = int(m.sum())
+            row = {
+                "n_items": n,
+                "f2": round(_f_score(self.decisions[m], self.truths[m],
+                                     lam), 4) if n else 0.0,
+                "avg_latency_s": round(float(np.mean(self.latencies[m])), 3)
+                if n else 0.0,
+                "p99_latency_s": round(
+                    float(np.percentile(self.latencies[m], 99)), 3)
+                if n else 0.0,
+            }
+            row.update(self.queries.get(q, {}))
+            out[q] = row
+        return out
+
     def summary(self) -> Dict[str, float]:
         """Flat row with the Tables II-IV column schema (+ harness extras)."""
         return {
@@ -117,6 +161,12 @@ class QueryReport:
             "ticks": self.ticks,
             "launches_per_tick": round(
                 self.kernel_launches / max(self.ticks, 1), 3),
+            # multi-query runtime: the launch columns above NOT scaling
+            # with n_queries is the fused-(Q, E, N)-launch proof
+            "n_queries": max(1, len(self.queries)
+                             or (len(np.unique(self.query_ids))
+                                 if len(self.query_ids) else 1)),
+            "cloud_train_s": round(self.cloud_train_s, 3),
         }
 
 

@@ -7,9 +7,16 @@ event loop:
                                      today; the pixel/CNN path slots in
                                      behind the same ``Frontend`` seam)
   events     repro.system.events     typed events + time-ordered queue
-  triage     repro.system.triage     per-edge Eqs. 8-9 thresholds + ONE
-                                     fused fleet-triage Pallas launch per
-                                     scheduler tick (``ops.triage_fleet``)
+  queries    repro.system.queries    runtime CQ lifecycle: arrival ->
+                                     Fig. 5 cloud fine-tune -> per-edge
+                                     weight shipment (WAN downlink) ->
+                                     serve -> retire; detections whose
+                                     query has no model on their edge yet
+                                     wait in a deferral buffer
+  triage     repro.system.triage     per-(query, edge) Eqs. 8-9 thresholds
+                                     + ONE fused (Q, E, N) triage Pallas
+                                     launch per scheduler tick
+                                     (``ops.triage_fleet``)
   allocator  repro.core.scheduler    Eq. 7: argmin_j Q_j * t_j (+ WAN
                                      backlog for the cloud), node liveness
   nodes      repro.system.nodes      per-node deque queues, service state,
@@ -44,15 +51,20 @@ from repro.system.events import (
     EventQueue,
     FeedbackTick,
     ModelUpdate,
+    QueryArrival,
+    QueryRetire,
+    ReleaseTick,
     Sample,
     ServiceDone,
     Task,
     TickArrivals,
+    TrainDone,
     Transfer,
 )
 from repro.system.feedback import FeedbackStage
 from repro.system.frontend import ConfidenceStreamFrontend, Frontend
 from repro.system.nodes import NodeBank
+from repro.system.queries import QuerySet
 from repro.system.scenario import Scenario
 from repro.system.transport import Transport
 from repro.system.triage import ACCEPT, ESCALATE, TriageStage
@@ -131,6 +143,7 @@ class QueryPipeline:
         self._dec.append(decision)
         self._tru.append(it.is_query)
         self._fin.append(t)
+        self._qid.append(it.query)
         self.nodes.served[node] += 1
 
     def _dispatch(self, t: float, src: int, task: Task,
@@ -169,9 +182,19 @@ class QueryPipeline:
 
     # --- per-tick fused triage ------------------------------------------------
     def _on_tick(self, t: float, batches: Dict[int, List[Item]]) -> None:
-        """One scheduler tick's arrivals: failover dead edges' batches, shed
-        overloaded edges' raw batches via Eq. 7, triage everything else in
-        ONE fused fleet launch, enqueue per-route."""
+        """One scheduler tick's arrivals: failover dead edges' batches,
+        defer queries whose CQ weights haven't reached their edge yet, shed
+        overloaded edges' raw batches via Eq. 7, triage everything else —
+        every live query on every live edge — in ONE fused (Q, E, N)
+        launch, enqueue per-route."""
+        if self._release:
+            # weights delivered since last tick: the items that were
+            # waiting join this tick's batches (ONE launch covers both)
+            merged = {e: list(b) for e, b in batches.items()}
+            for e, pend in self._release.items():
+                merged.setdefault(e, []).extend(pend)
+            self._release = {}
+            batches = merged
         live: Dict[int, List[Item]] = {}
         for edge, batch in batches.items():
             if edge in self.nodes.dead:
@@ -190,24 +213,51 @@ class QueryPipeline:
                     self._enqueue(t, edge, Task(it, "classify",
                                                 it.conf > 0.5))
             return
-        self.triage_stage.refresh(t, sorted(live))
+        # split each edge batch along the query axis, holding back items
+        # whose query can't be served on this edge yet: while the cloud
+        # fine-tunes (or the weights ride the downlink), that query's
+        # escalations are blocked by construction — nothing of it triages
+        ready: Dict[Tuple[int, int], List[Item]] = {}
+        for edge, batch in live.items():
+            for it in batch:
+                if self.queries.live_on(it.query, edge):
+                    ready.setdefault((it.query, edge), []).append(it)
+                elif self.queries.is_retired(it.query):
+                    # straggler of a retired query: the edge answers with
+                    # the pre-trained prior (no CQ model to consult)
+                    self._enqueue(t, edge, Task(it, "classify",
+                                                it.conf > 0.5))
+                else:
+                    self._deferred.setdefault((it.query, edge),
+                                              []).append(it)
+                    self._deferred_count[it.query] = \
+                        self._deferred_count.get(it.query, 0) + 1
+        if not ready:
+            return
+        self.triage_stage.refresh(t, sorted(ready))
         if self.sc.scheme == "surveiledge":
-            for e in live:
-                self.db.put(f"alpha{e}", self.triage_stage.states[e].alpha)
-                self.db.put(f"beta{e}", self.triage_stage.states[e].beta)
+            for q, e in ready:
+                st = self.triage_stage.states[(q, e)]
+                tag = f"{e}" if q == self.queries.default else f"{e}q{q}"
+                self.db.put(f"alpha{tag}", st.alpha)
+                self.db.put(f"beta{tag}", st.beta)
             # a home edge that can't drain its queue within the gate sheds
-            # this tick's raw batch across cloud/edges via Eq. 7 (the
-            # overloaded home has maximal Q*t, so it is effectively skipped)
-            for edge in [e for e in live
-                         if self.sched.nodes[e].drain_time
-                         > self.sc.offload_drain_s]:
-                for it in live.pop(edge):
+            # this tick's raw batch — every query's — across cloud/edges
+            # via Eq. 7 (the overloaded home has maximal Q*t, so it is
+            # effectively skipped)
+            overloaded = {e for _, e in ready
+                          if self.sched.nodes[e].drain_time
+                          > self.sc.offload_drain_s}
+            for key in [k for k in ready if k[1] in overloaded]:
+                for it in ready.pop(key):
                     self._rerouted += 1
-                    self._dispatch(t, edge, Task(it, "reclassify", None),
+                    self._dispatch(t, key[1], Task(it, "reclassify", None),
                                    count_escalated=False, exclude_src=True)
-        for edge, (routes, slots, conf_used) in self.triage_stage.triage_tick(
-                live).items():
-            for it, route, slot, cal in zip(live[edge], routes, slots,
+        if not ready:
+            return
+        for (q, edge), (routes, slots, conf_used) in \
+                self.triage_stage.triage_tick(ready).items():
+            for it, route, slot, cal in zip(ready[(q, edge)], routes, slots,
                                             conf_used):
                 if route == ESCALATE and slot >= 0:
                     decision = None                 # cloud-model's call
@@ -238,6 +288,18 @@ class QueryPipeline:
         for task in stranded:
             self._rerouted += 1
             self._dispatch(t, node, self._failover_task(task.item),
+                           count_escalated=False)
+        # items parked on this edge waiting for CQ weights die with it:
+        # survivors' accurate models answer them (the weights that were in
+        # flight to the dead edge are simply never applied)
+        for key in [k for k in self._deferred if k[1] == node]:
+            for it in self._deferred.pop(key):
+                self._rerouted += 1
+                self._dispatch(t, node, self._failover_task(it),
+                               count_escalated=False)
+        for it in self._release.pop(node, []):
+            self._rerouted += 1
+            self._dispatch(t, node, self._failover_task(it),
                            count_escalated=False)
 
     def _on_done(self, t: float, node: int, task: Task, svc: float) -> None:
@@ -284,13 +346,32 @@ class QueryPipeline:
         self.nodes = NodeBank(sc, self.service_s, self.rng)
         self.triage_stage = TriageStage(sc, self.sched, self.transport)
         self.feedback = FeedbackStage(sc, self.transport)
+        self.queries = QuerySet(sc)
         self._lat: List[float] = []
         self._dec: List[bool] = []
         self._tru: List[bool] = []
         self._fin: List[float] = []
+        self._qid: List[int] = []
         self._escalated = 0
         self._rerouted = 0
+        # (query, edge) -> items waiting for that query's CQ weights to
+        # reach that edge; edge -> items released by a delivery, absorbed
+        # by the next tick's fused launch
+        self._deferred: Dict[Tuple[int, int], List[Item]] = {}
+        self._release: Dict[int, List[Item]] = {}
+        self._deferred_count: Dict[int, int] = {}
+        self._train_total = 0.0
         tick_samples: List[Dict[int, int]] = []
+
+        # an item tagged with an undeclared query would defer forever (no
+        # lifecycle events ever activate it) and silently vanish from the
+        # report — reject the stream up front instead
+        unknown = {it.query for it in items} - set(self.queries.specs)
+        if unknown:
+            raise ValueError(
+                f"scenario {sc.name!r}: stream items reference undeclared "
+                f"query ids {sorted(unknown)} (declared: "
+                f"{sorted(self.queries.specs)})")
 
         # arrivals: cloud_only streams per item; the cascade/edge_only paths
         # batch each tick's detections into ONE TickArrivals event (the
@@ -309,6 +390,12 @@ class QueryPipeline:
             self.events.push(k * sc.interval_s, Sample())
         for t_fail, node in sc.failures:
             self.events.push(t_fail, EdgeFail(node))
+        if self.queries.lifecycle:
+            for sp in sorted(self.queries.specs.values(),
+                             key=lambda s: s.query):
+                self.events.push(sp.t_arrive_s, QueryArrival(sp.query))
+                if sp.t_retire_s is not None:
+                    self.events.push(sp.t_retire_s, QueryRetire(sp.query))
         if self.feedback.enabled:
             horizon = n_ticks * sc.interval_s
             k = 1
@@ -339,18 +426,87 @@ class QueryPipeline:
             elif isinstance(ev, EdgeFail):
                 if ev.node not in self.nodes.dead:
                     self._fail_node(t, ev.node)
+            elif isinstance(ev, QueryArrival):
+                # charge the Fig. 5 fine-tune on the cloud; this query's
+                # detections defer (its escalations are blocked) until its
+                # weights deliver per edge
+                dt = self.queries.arrive(ev.query, t)
+                self.nodes.busy_s[CLOUD] += dt
+                self._train_total += dt
+                self.events.push(t + dt, TrainDone(ev.query))
+            elif isinstance(ev, TrainDone):
+                if not self.queries.is_retired(ev.query):
+                    # ship the fresh CQ weights to every live edge over the
+                    # shared WAN downlink (FIFO: a fleet-wide push
+                    # serializes, so edges go live staggered)
+                    for e in sorted(self.sc.edge_ids):
+                        if e in self.nodes.dead:
+                            continue
+                        done = self.transport.wan_recv(t, self.sc.cq_nbytes)
+                        self.events.push(done, ModelUpdate(
+                            e, None, query=ev.query, kind="weights"))
+            elif isinstance(ev, QueryRetire):
+                self.queries.retire(ev.query)
+                self.triage_stage.retire_query(ev.query)
+                self.feedback.retire_query(ev.query)
+                # stragglers still waiting for weights are answered with
+                # the pre-trained prior; in-flight escalations complete
+                # normally and are still counted
+                for key in [k for k in self._deferred if k[0] == ev.query]:
+                    q, e = key
+                    for it in self._deferred.pop(key):
+                        self._enqueue(t, e, Task(it, "classify",
+                                                 it.conf > 0.5))
+            elif isinstance(ev, ReleaseTick):
+                # only fires a launch if this tick boundary had no natural
+                # TickArrivals (which would have absorbed the release)
+                if self._release:
+                    self._on_tick(t, {})
             elif isinstance(ev, FeedbackTick):
-                # one fused fleet recalibration launch; the per-edge
+                # one fused fleet recalibration launch; the per-row
                 # results land as ModelUpdate events at downlink delivery
-                for done, update in self.feedback.tick(t, self.nodes.dead):
+                for done, update in self.feedback.tick(
+                        t, self.nodes.dead, self.queries.retired):
                     self.events.push(done, update)
             elif isinstance(ev, ModelUpdate):
-                if ev.edge not in self.nodes.dead:
-                    self.triage_stage.apply_update(ev.edge, ev.params)
+                if ev.kind == "weights":
+                    if ev.edge in self.nodes.dead \
+                            or self.queries.is_retired(ev.query):
+                        continue
+                    self.queries.activate(ev.query, ev.edge)
+                    pend = self._deferred.pop((ev.query, ev.edge), None)
+                    if pend:
+                        self._release.setdefault(ev.edge, []).extend(pend)
+                        self.events.push(
+                            (math.floor(t / sc.interval_s) + 1)
+                            * sc.interval_s, ReleaseTick())
+                elif ev.edge not in self.nodes.dead \
+                        and not self.queries.is_retired(ev.query):
+                    # a calibration that retired mid-flight must not undo
+                    # retire_query's reset
+                    self.triage_stage.apply_update(ev.query, ev.edge,
+                                                   ev.params)
             else:
                 assert isinstance(ev, ServiceDone), ev
                 self._on_done(t, ev.node, ev.task, ev.service_s)
 
+        qinfo: Dict[int, Dict] = {}
+        if sc.queries:
+            by_query = self.triage_stage.thresholds_by_query()
+            for q, sp in sorted(self.queries.specs.items()):
+                qinfo[q] = {
+                    "train_scheme": sp.train_scheme,
+                    "t_arrive_s": sp.t_arrive_s,
+                    "t_retire_s": sp.t_retire_s,
+                    "train_s": round(self.queries.train_s.get(q, 0.0), 3),
+                    "deferred": self._deferred_count.get(q, 0),
+                    "live_edges": sorted(self.queries.live_edges[q]),
+                    "thresholds": {e: (round(a, 4), round(b, 4))
+                                   for e, (a, b) in
+                                   sorted(by_query.get(q, {}).items())}
+                    if sc.scheme in ("surveiledge", "surveiledge_fixed")
+                    else {},
+                }
         return MX.QueryReport(
             scenario=sc.name,
             scheme=sc.scheme,
@@ -358,6 +514,9 @@ class QueryPipeline:
             decisions=np.asarray(self._dec, bool),
             truths=np.asarray(self._tru, bool),
             finish_times=np.asarray(self._fin),
+            query_ids=np.asarray(self._qid, np.int64),
+            queries=qinfo,
+            cloud_train_s=self._train_total,
             uploaded_bytes=self.transport.uploaded_bytes,
             lan_bytes=self.transport.lan_bytes,
             downloaded_bytes=self.transport.downloaded_bytes,

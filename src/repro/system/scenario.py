@@ -21,8 +21,20 @@ import numpy as np
 
 from repro.data import synthetic_video as SV
 from repro.serving.simulator import Item
+from repro.system.queries import QuerySpec
 
 SCHEMES = ("surveiledge", "surveiledge_fixed", "edge_only", "cloud_only")
+
+# Fig. 5's accuracy side of the training-scheme trade, expressed as the
+# class-conditional Beta sharpness of each query's synthetic CQ
+# confidences: All-Fine-tune scores sharpest (it paid ~num_cameras-x the
+# training time), No-Fine-tune ships instantly but its pre-trained-only
+# scores blur toward the middle of the axis.
+_SCHEME_BETAS: Dict[str, Tuple[Tuple[float, float], Tuple[float, float]]] = {
+    "surveiledge": ((8.0, 2.0), (2.0, 8.0)),
+    "all_finetune": ((9.0, 1.5), (1.5, 9.0)),
+    "no_finetune": ((4.0, 2.5), (2.5, 4.0)),
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,6 +87,15 @@ class Scenario:
     drift_at_s: Optional[float] = None
     drift_beta: Tuple[Tuple[float, float], Tuple[float, float]] = \
         ((5.0, 5.0), (1.2, 12.0))
+    # --- runtime query lifecycle ---------------------------------------------
+    # explicit continuous queries with staggered arrivals/retirements; empty
+    # means ONE implicit query live for the whole run (the pre-lifecycle
+    # engine, bit-identical).  Each arrival charges its Fig. 5 fine-tune on
+    # the cloud and ships per-edge CQ weights down the WAN before serving.
+    queries: Tuple[QuerySpec, ...] = ()
+    train_step_s: float = 0.05               # cloud seconds per fine-tune step
+    #                                          (Fig. 5 cost model's knob)
+    cq_nbytes: int = 4 * 1024 * 1024         # per-edge CQ weight shipment
     # --- stream --------------------------------------------------------------
     seed: int = 0
     items: Optional[Sequence[Item]] = None   # injected pre-scored stream
@@ -104,6 +125,16 @@ class Scenario:
             raise ValueError(
                 f"scenario {self.name!r}: update_period_s="
                 f"{self.update_period_s} must be positive (or None)")
+        if self.queries:
+            ids = [sp.query for sp in self.queries]
+            if len(set(ids)) != len(ids):
+                raise ValueError(
+                    f"scenario {self.name!r}: duplicate query ids in "
+                    f"queries={ids}")
+        if self.train_step_s < 0:
+            raise ValueError(
+                f"scenario {self.name!r}: train_step_s={self.train_step_s} "
+                f"must be >= 0")
 
     @property
     def num_edges(self) -> int:
@@ -112,6 +143,12 @@ class Scenario:
     @property
     def edge_ids(self) -> Tuple[int, ...]:
         return tuple(range(1, self.num_edges + 1))
+
+    @property
+    def query_ids(self) -> Tuple[int, ...]:
+        """Every declared query id (sorted); ``(0,)`` for the implicit
+        single-query run."""
+        return tuple(sorted(sp.query for sp in self.queries)) or (0,)
 
     def with_scheme(self, scheme: str) -> "Scenario":
         """Same scenario under another query scheme (validated in
@@ -155,18 +192,19 @@ def frame_schedule(sc: Scenario) -> np.ndarray:
     return ts[:, None] + stagger[None, :]
 
 
-def synthetic_confidence_stream(sc: Scenario) -> List[Item]:
-    """Model-free item stream: Poisson arrivals from the procedural camera
-    fleet, edge confidence drawn from class-conditional Beta distributions
-    (query objects ~ Beta(8,2), others ~ Beta(2,8)) — overlapping enough
-    that the [beta, alpha] escalation band carries real mass.
+def _query_substream(sc: Scenario, cams: List[SV.CameraSpec],
+                     rng: np.random.Generator, query: int,
+                     betas: Tuple[Tuple[float, float], Tuple[float, float]],
+                     t0: float, t1: float) -> List[Item]:
+    """One query's detections: Poisson arrivals from the camera fleet,
+    confidence from the query's class-conditional Betas, windowed to the
+    query's [t0, t1) lifetime.
 
     All random draws are vectorized (one Poisson matrix over ticks x
-    cameras, then per-camera class/confidence/jitter vectors), so setup
-    cost stays sub-linear in Python overhead per item — city-scale fleets
-    (hundreds of cameras) synthesize in milliseconds."""
-    rng = np.random.default_rng(sc.seed)
-    cams = scenario_cameras(sc)
+    cameras, then per-camera class/confidence/jitter vectors) and the
+    lifetime window is a post-draw mask, so a windowed query's draws stay
+    deterministic under seed regardless of its lifetime."""
+    (qa0, qb0), (oa0, ob0) = betas
     ts = np.arange(0.0, sc.duration_s, sc.interval_s)              # (T,)
     period = np.asarray([c.busy_period_s for c in cams])           # (C,)
     phase = 2 * np.pi * ts[:, None] / period[None, :] \
@@ -182,7 +220,8 @@ def synthetic_confidence_stream(sc: Scenario) -> List[Item]:
             continue
         cls = rng.choice(SV.NUM_CLASSES, size=n, p=cam.class_mix)
         is_query = cls == SV.QUERY_CLASS
-        conf = np.where(is_query, rng.beta(8, 2, n), rng.beta(2, 8, n))
+        conf = np.where(is_query, rng.beta(qa0, qb0, n),
+                        rng.beta(oa0, ob0, n))
         t_arr = np.repeat(ts, counts[:, j]) \
             + rng.uniform(0, sc.interval_s, n)
         if sc.drift_at_s is not None:
@@ -193,11 +232,39 @@ def synthetic_confidence_stream(sc: Scenario) -> List[Item]:
             drifted = np.where(is_query, rng.beta(qa, qb, n),
                                rng.beta(oa, ob, n))
             conf = np.where(t_arr >= sc.drift_at_s, drifted, conf)
+        keep = (t_arr >= t0) & (t_arr < t1)
         edge = cam.cam_id % sc.num_edges + 1
         items.extend(
             Item(t_arrival=float(t), camera=cam.cam_id, edge_device=edge,
-                 conf=float(c), is_query=bool(q))
-            for t, c, q in zip(t_arr, conf, is_query))
+                 conf=float(c), is_query=bool(q), query=query)
+            for t, c, q in zip(t_arr[keep], conf[keep], is_query[keep]))
+    return items
+
+
+def synthetic_confidence_stream(sc: Scenario) -> List[Item]:
+    """Model-free item stream: Poisson arrivals from the procedural camera
+    fleet, edge confidence drawn from class-conditional Beta distributions
+    (query objects ~ Beta(8,2), others ~ Beta(2,8)) — overlapping enough
+    that the [beta, alpha] escalation band carries real mass.
+
+    With explicit ``sc.queries``, every query contributes its own
+    substream (independent per-query rng, lifetime-windowed, confidence
+    sharpness set by its Fig. 5 ``train_scheme`` via ``_SCHEME_BETAS``):
+    each live CQ watches the same cameras but detects its own objects, so
+    total traffic scales with concurrent live queries."""
+    cams = scenario_cameras(sc)
+    if not sc.queries:
+        items = _query_substream(
+            sc, cams, np.random.default_rng(sc.seed), 0,
+            _SCHEME_BETAS["surveiledge"], 0.0, float("inf"))
+    else:
+        items = []
+        for sp in sorted(sc.queries, key=lambda s: s.query):
+            t1 = sp.t_retire_s if sp.t_retire_s is not None else float("inf")
+            items.extend(_query_substream(
+                sc, cams, np.random.default_rng((sc.seed, 1001 + sp.query)),
+                sp.query, _SCHEME_BETAS[sp.train_scheme],
+                sp.t_arrive_s, t1))
     items.sort(key=lambda it: it.t_arrival)
     return items
 
@@ -303,6 +370,77 @@ def drifting_city(num_cameras: int = 12, num_edges: int = 4,
                     drift_at_s=drift_at, update_period_s=update, **kw)
 
 
+def multi_query_city(num_cameras: int = 12, num_edges: int = 4,
+                     **kw) -> Scenario:
+    """Three concurrent CQs with staggered arrivals and overlapping
+    lifetimes — the paper's headline workload (queries against a live
+    fleet), one per Fig. 5 training scheme so the training-time/accuracy
+    trade shows up in ONE run's per-query report rows:
+
+      q0 (surveiledge)  — arrives at t=0, short cluster fine-tune, serves
+                          almost the whole run
+      q1 (all_finetune) — arrives a fifth in, pays the ~num_cameras-x
+                          per-camera fine-tune (its early detections wait
+                          in the deferral buffers — visible head-of-query
+                          latency), retires before the run ends
+      q2 (no_finetune)  — arrives mid-run, ships instantly, but its
+                          pre-trained-only confidences are blurrier
+
+    All three queries' detections across all edges still triage in ONE
+    fused (Q, E, N) Pallas launch per scheduler tick, and Eq. 7 prices
+    every node by its total load across the queries sharing it.
+    ``train_step_s`` scales with duration so shrunken smoke runs keep the
+    same training-time-to-lifetime proportions."""
+    duration = kw.pop("duration_s", 90.0)
+    queries = kw.pop("queries", (
+        QuerySpec(0, 0.0, None, "surveiledge"),
+        QuerySpec(1, duration * 0.2, duration * 0.85, "all_finetune"),
+        QuerySpec(2, duration * 0.45, None, "no_finetune")))
+    speeds = tuple(1.0 if i % 2 == 0 else 0.5 for i in range(num_edges))
+    return Scenario(name="multi_query_city", edge_speeds=speeds,
+                    num_cameras=num_cameras, duration_s=duration,
+                    queries=queries,
+                    train_step_s=kw.pop("train_step_s", duration / 1800.0),
+                    update_period_s=kw.pop("update_period_s", 10.0), **kw)
+
+
+def query_churn(num_cameras: int = 10, num_edges: int = 3, **kw) -> Scenario:
+    """Query churn under concept drift: five CQs arriving and retiring
+    across the run, including an arrival during another query's Fig. 5
+    fine-tune (the cloud trains both back to back while their detections
+    defer), a retire-mid-drift (q0 leaves just after the confidence
+    distributions slip, while its last escalations are still in flight),
+    and a late post-drift arrival whose fresh fine-tune is born into the
+    drifted regime.
+
+    The online recalibration loop is OFF here by default: at this
+    operating point escalation is cheap, so the cloud's labels are
+    censored to the [beta, alpha] band and a per-(query, edge) Platt fit
+    extrapolates that biased sample to the whole axis — measurably worse
+    than serving stale (the loop's measuring stick, with honest
+    label-generating shedding, is ``drifting_city``).  Pass
+    ``update_period_s=...`` to study exactly that failure mode."""
+    duration = kw.pop("duration_s", 90.0)
+    drift_at = kw.pop("drift_at_s", duration / 3.0)
+    queries = kw.pop("queries", (
+        QuerySpec(0, 0.0, duration * 0.4, "surveiledge"),
+        QuerySpec(1, duration * 0.1, duration * 0.7, "surveiledge"),
+        QuerySpec(2, duration * 0.15, None, "no_finetune"),
+        QuerySpec(3, duration * 0.12, duration * 0.55, "all_finetune"),
+        QuerySpec(4, duration * 0.6, None, "surveiledge")))
+    speeds = tuple(1.0 if i % 2 == 0 else 0.5 for i in range(num_edges))
+    # churn multiplies traffic (every live query scores every camera's
+    # detections), so compute and the shedding gate are sized for the
+    # multi-query peak — the point is lifecycle churn, not overload
+    return Scenario(name="query_churn", edge_speeds=speeds,
+                    num_cameras=num_cameras, duration_s=duration,
+                    queries=queries, drift_at_s=drift_at,
+                    edge_service_s=kw.pop("edge_service_s", 0.04),
+                    offload_drain_s=kw.pop("offload_drain_s", 6.0),
+                    train_step_s=kw.pop("train_step_s", duration / 1800.0),
+                    update_period_s=kw.pop("update_period_s", None), **kw)
+
+
 def pixel_city(num_cameras: int = 12, num_edges: int = 4, **kw) -> Scenario:
     """Pixel-path operating point: the frames->query loop at a size the
     CPU-only interpret-mode kernels finish inside the CI smoke budget.
@@ -327,5 +465,7 @@ SCENARIOS: Dict[str, Callable[..., Scenario]] = {
     "straggler_edge": straggler_edge,
     "city_scale": city_scale,
     "drifting_city": drifting_city,
+    "multi_query_city": multi_query_city,
+    "query_churn": query_churn,
     "pixel_city": pixel_city,
 }

@@ -1,0 +1,328 @@
+"""Multi-query runtime tests: (Q, E, N) kernel parity + Q-axis padding
+invisibility, the query lifecycle's event ordering (arrival-during-
+training, retire-with-in-flight-escalations), and the one-fused-launch-
+per-tick invariant with concurrent live queries."""
+import numpy as np
+import pytest
+
+from repro.core.finetune import scheme_train_time
+from repro.kernels import ops, ref
+from repro.serving.simulator import Item
+from repro.system import (
+    QuerySpec,
+    Scenario,
+    multi_query_city,
+    query_churn,
+    run_query,
+    synthetic_confidence_stream,
+)
+
+# --- (Q, E, N) kernel parity --------------------------------------------------
+
+
+def test_triage_fleet_query_axis_matches_per_query_fleet():
+    rng = np.random.default_rng(7)
+    Q, E, N = 3, 5, 21
+    conf = rng.uniform(0, 1, (Q, E, N)).astype(np.float32)
+    th = np.stack([rng.uniform(0.5, 1.0, (Q, E)),
+                   rng.uniform(0.0, 0.45, (Q, E))], axis=-1).astype(np.float32)
+    r3, s3, c3 = map(np.asarray, ops.triage_fleet(conf, th, capacity=4))
+    assert r3.shape == (Q, E, N) and c3.shape == (Q, E)
+    for q in range(Q):
+        r2, s2, c2 = map(np.asarray,
+                         ops.triage_fleet(conf[q], th[q], capacity=4))
+        np.testing.assert_array_equal(r3[q], r2)
+        np.testing.assert_array_equal(s3[q], s2)
+        np.testing.assert_array_equal(c3[q], c2)
+
+
+def test_triage_fleet_query_axis_matches_ref():
+    rng = np.random.default_rng(8)
+    conf = rng.uniform(0, 1, (2, 3, 17)).astype(np.float32)
+    th = np.stack([rng.uniform(0.5, 1.0, (2, 3)),
+                   rng.uniform(0.0, 0.45, (2, 3))], axis=-1).astype(np.float32)
+    got = ops.triage_fleet(conf, th, capacity=6)
+    want = ref.triage_fleet_ref(conf, th, 6)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_triage_fleet_query_axis_pad_rows_are_inert():
+    """Bucket-padding the query axis (3 -> 4) must be invisible: the pad
+    row's lanes are all conf=-1.0 under thresholds (1, 0), which can never
+    escalate, claim a slot, or perturb real rows' compaction."""
+    rng = np.random.default_rng(9)
+    conf = rng.uniform(0, 1, (3, 4, 9)).astype(np.float32)   # Q=3 -> pads to 4
+    th = np.tile(np.asarray([0.8, 0.1], np.float32), (3, 4, 1))
+    r3, s3, c3 = map(np.asarray, ops.triage_fleet(conf, th, capacity=2))
+    # growing Q by an explicitly-inert row gives identical leading rows
+    conf4 = np.concatenate([conf, np.full((1, 4, 9), -1.0, np.float32)])
+    th4 = np.concatenate([th, np.tile(np.asarray([1.0, 0.0], np.float32),
+                                      (1, 4, 1))])
+    r4, s4, c4 = map(np.asarray, ops.triage_fleet(conf4, th4, capacity=2))
+    np.testing.assert_array_equal(r4[:3], r3)
+    np.testing.assert_array_equal(s4[:3], s3)
+    np.testing.assert_array_equal(c4[:3], c3)
+    assert np.all(r4[3] == 1) and np.all(s4[3] == -1) and np.all(c4[3] == 0)
+
+
+def test_calibrate_fleet_query_axis_matches_2d_fold():
+    rng = np.random.default_rng(10)
+    Q, E, N = 2, 3, 64
+    scores = rng.uniform(0, 1, (Q, E, N)).astype(np.float32)
+    truths = (rng.uniform(0, 1, (Q, E, N)) < scores).astype(np.float32)
+    p3, n3 = map(np.asarray, ops.calibrate_fleet(scores, truths))
+    assert p3.shape == (Q, E, 2) and n3.shape == (Q, E)
+    p2, n2 = map(np.asarray, ops.calibrate_fleet(
+        scores.reshape(Q * E, N), truths.reshape(Q * E, N)))
+    np.testing.assert_allclose(p3, p2.reshape(Q, E, 2), atol=1e-6)
+    np.testing.assert_array_equal(n3, n2.reshape(Q, E))
+    pr, nr = ref.calibrate_fleet_ref(scores, truths, 8, 8)
+    assert pr.shape == (Q, E, 2)
+    np.testing.assert_allclose(p3, pr, atol=2e-3)
+    np.testing.assert_array_equal(n3, nr)
+
+
+@pytest.mark.slow
+def test_triage_fleet_query_padding_invisibility_property():
+    hypothesis = pytest.importorskip(
+        "hypothesis",
+        reason="property tests need hypothesis (pip install -r "
+               "requirements-dev.txt)")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        st.integers(1, 5),                  # queries (crosses the 2/4 buckets)
+        st.integers(1, 4),                  # edges
+        st.integers(1, 19),                 # lanes
+        st.integers(1, 8),                  # capacity
+        st.integers(0, 2 ** 31 - 1),
+    )
+    def prop(Q, E, N, capacity, seed):
+        rng = np.random.default_rng(seed)
+        conf = rng.uniform(0, 1, (Q, E, N)).astype(np.float32)
+        th = np.stack([rng.uniform(0.5, 1.0, (Q, E)),
+                       rng.uniform(0.0, 0.5, (Q, E))],
+                      axis=-1).astype(np.float32)
+        r3, s3, c3 = map(np.asarray,
+                         ops.triage_fleet(conf, th, capacity=capacity))
+        # the fused (Q, E, N) launch == Q independent (E, N) launches
+        for q in range(Q):
+            r2, s2, c2 = map(np.asarray, ops.triage_fleet(
+                conf[q], th[q], capacity=capacity))
+            np.testing.assert_array_equal(r3[q], r2)
+            np.testing.assert_array_equal(s3[q], s2)
+            np.testing.assert_array_equal(c3[q], c2)
+        # ... and == the jnp reference on the raw (unpadded) tensor
+        rr, sr, cr = map(np.asarray,
+                         ref.triage_fleet_ref(conf, th, capacity))
+        np.testing.assert_array_equal(r3, rr)
+        np.testing.assert_array_equal(s3, sr)
+        np.testing.assert_array_equal(c3, cr)
+
+    prop()
+
+
+# --- lifecycle helpers --------------------------------------------------------
+
+
+def _instant_queries(n):
+    """Queries that arrive at t=0 with zero training time (no_finetune),
+    so only the (tiny) weight shipment separates arrival from serving."""
+    return tuple(QuerySpec(q, 0.0, None, "no_finetune") for q in range(n))
+
+
+def _mq_scenario(queries, **kw):
+    return Scenario(name="mq_test", edge_speeds=kw.pop("edge_speeds",
+                                                       (1.0, 1.0)),
+                    num_cameras=kw.pop("num_cameras", 4),
+                    duration_s=kw.pop("duration_s", 30.0),
+                    queries=queries,
+                    cq_nbytes=kw.pop("cq_nbytes", 1024),
+                    offload_drain_s=kw.pop("offload_drain_s", 1e9), **kw)
+
+
+def _items(specs):
+    """[(t, edge, conf, is_query, query), ...] -> sorted Item list."""
+    out = [Item(t_arrival=t, camera=0, edge_device=e, conf=c, is_query=g,
+                query=q) for (t, e, c, g, q) in specs]
+    out.sort(key=lambda it: it.t_arrival)
+    return out
+
+
+# --- one fused launch per tick with concurrent live queries -------------------
+
+
+def test_three_live_queries_one_fused_launch_per_arrival_tick():
+    """3 concurrent live queries, every item arriving after all weights
+    delivered: kernel_launches == ticks-with-arrivals, NOT x3."""
+    sc = _mq_scenario(_instant_queries(3))
+    specs = []
+    for k in range(5, 25):                      # ticks 5..24: all queries live
+        for q in range(3):
+            for e in (1, 2):
+                specs.append((k + 0.3 + 0.01 * q, e, 0.5 + 0.1 * q, True, q))
+    items = _items(specs)
+    ticks_with_arrivals = {int(it.t_arrival // sc.interval_s) for it in items}
+    r = run_query(sc, items=items)
+    assert len(r.latencies) == len(items)
+    assert r.kernel_launches == len(ticks_with_arrivals)
+    assert r.kernel_launches < 2 * len(ticks_with_arrivals)   # never x Q
+    assert r.summary()["launches_per_tick"] <= 1.0
+    assert r.summary()["n_queries"] == 3
+
+
+def test_triage_stage_counts_one_launch_for_multi_query_tick():
+    """Unit-level fusion proof: a tick batch spanning 3 queries x 2 edges
+    costs exactly ONE ops.triage_fleet call."""
+    from repro.core.scheduler import Scheduler
+    from repro.system.transport import Transport
+    from repro.system.triage import TriageStage
+
+    sc = _mq_scenario(_instant_queries(3))
+    stage = TriageStage(sc, Scheduler([0, 1, 2]), Transport(sc))
+    batches = {
+        (q, e): [Item(t_arrival=0.0, camera=0, edge_device=e, conf=0.5,
+                      is_query=True, query=q)]
+        for q in range(3) for e in (1, 2)}
+    before = stage.launches
+    out = stage.triage_tick(batches)
+    assert stage.launches == before + 1
+    assert sorted(out) == sorted(batches)
+    for key, (routes, slots, conf_used) in out.items():
+        assert len(routes) == len(slots) == len(conf_used) == 1
+
+
+# --- event ordering: arrival during training ----------------------------------
+
+
+def test_arrival_during_training_defers_then_serves():
+    """q1 arrives while the cloud is still fine-tuning q0: both trainings
+    run, both queries eventually serve on every edge, every item is
+    answered, and no item of a training query finishes before its
+    training ended (its escalations were blocked by deferral)."""
+    queries = (QuerySpec(0, 0.0, None, "surveiledge"),
+               QuerySpec(1, 1.0, None, "surveiledge"))
+    sc = _mq_scenario(queries, train_step_s=0.1)     # 4s per cluster fit
+    train_s = scheme_train_time("surveiledge", sc.num_cameras, step_s=0.1)
+    assert train_s == 4.0                            # q1 arrives inside q0's
+    specs = [(0.5 + k, e, 0.5, True, q)              # escalation-band conf
+             for k in range(20) for e in (1, 2) for q in (0, 1)]
+    items = _items(specs)
+    r = run_query(sc, items=items)
+    assert len(r.latencies) == len(items)
+    for q, sp in ((0, queries[0]), (1, queries[1])):
+        row = r.per_query_summary()[q]
+        assert row["train_s"] == pytest.approx(train_s)
+        assert row["live_edges"] == [1, 2]
+        assert row["deferred"] > 0                   # items waited on weights
+        finished = r.finish_times[r.query_ids == q]
+        assert finished.min() >= sp.t_arrive_s + train_s
+    assert r.cloud_train_s == pytest.approx(2 * train_s)
+
+
+# --- event ordering: retire with in-flight escalations ------------------------
+
+
+def test_retire_with_inflight_escalations_still_answers_everything():
+    """q0 retires at t=12 with escalations still riding the (slow) WAN:
+    they complete after retirement and are counted — no lost answers —
+    while items still waiting for q1's weights at ITS retirement are
+    answered with the pre-trained prior."""
+    queries = (QuerySpec(0, 0.0, 12.0, "no_finetune"),
+               QuerySpec(1, 10.0, 14.0, "all_finetune"))  # trains past retire
+    sc = _mq_scenario(queries, uplink_MBps=0.05, train_step_s=0.1,
+                      duration_s=30.0)
+    specs = []
+    for k in range(2, 12):
+        specs.append((k + 0.5, 1, 0.5, True, 0))     # escalation-band -> WAN
+    for k in range(10, 14):
+        specs.append((k + 0.5, 2, 0.9, True, 1))     # deferred forever
+    items = _items(specs)
+    r = run_query(sc, items=items)
+    assert len(r.latencies) == len(items)            # nothing lost
+    fin0 = r.finish_times[r.query_ids == 0]
+    assert fin0.max() > 12.0                         # in-flight past retire
+    assert r.escalated > 0
+    # q1 never went live anywhere (training outlived it); its items were
+    # flushed at retirement with the prior, not dropped
+    row1 = r.per_query_summary()[1]
+    assert row1["live_edges"] == []
+    assert row1["n_items"] == 4
+    fin1 = r.finish_times[r.query_ids == 1]
+    assert fin1.min() >= 14.0                        # held until retirement
+
+
+# --- presets end to end -------------------------------------------------------
+
+
+def test_multi_query_city_smoke():
+    sc = multi_query_city(num_cameras=6, duration_s=45.0, seed=1)
+    assert len(sc.queries) == 3
+    stream = synthetic_confidence_stream(sc)
+    # per-query substreams respect the lifetime windows
+    for sp in sc.queries:
+        t1 = sp.t_retire_s if sp.t_retire_s is not None else float("inf")
+        for it in stream:
+            if it.query == sp.query:
+                assert sp.t_arrive_s <= it.t_arrival < t1
+    r = run_query(sc, items=stream)
+    assert len(r.latencies) == len(stream)
+    s = r.summary()
+    assert s["kernel_launches"] <= s["ticks"]        # fused, never x Q
+    assert s["launches_per_tick"] <= 1.0
+    rows = r.per_query_summary()
+    assert sorted(rows) == [0, 1, 2]
+    # the Fig. 5 trade surfaces in the per-query rows: all_finetune pays
+    # the longest training, no_finetune none at all but scores worst
+    by_scheme = {row["train_scheme"]: row for row in rows.values()}
+    assert by_scheme["all_finetune"]["train_s"] \
+        > by_scheme["surveiledge"]["train_s"] > 0
+    assert by_scheme["no_finetune"]["train_s"] == 0
+    assert by_scheme["no_finetune"]["f2"] \
+        < min(by_scheme["surveiledge"]["f2"], by_scheme["all_finetune"]["f2"])
+
+
+def test_query_churn_smoke():
+    sc = query_churn(num_cameras=6, duration_s=45.0, seed=2)
+    stream = synthetic_confidence_stream(sc)
+    r = run_query(sc, items=stream)
+    assert len(r.latencies) == len(stream)
+    assert r.kernel_launches <= r.ticks
+    assert sorted(r.per_query_summary()) == [0, 1, 2, 3, 4]
+    # retired queries answered everything they generated
+    for sp in sc.queries:
+        n_stream = sum(1 for it in stream if it.query == sp.query)
+        assert r.per_query_summary()[sp.query]["n_items"] == n_stream
+
+
+# --- validation ---------------------------------------------------------------
+
+
+def test_query_spec_validation():
+    with pytest.raises(ValueError, match="train_scheme"):
+        QuerySpec(0, 0.0, None, "bogus")
+    with pytest.raises(ValueError, match="t_retire_s"):
+        QuerySpec(0, 5.0, 4.0)
+    with pytest.raises(ValueError, match="duplicate query ids"):
+        Scenario(name="dup", queries=(QuerySpec(0), QuerySpec(0, 1.0)))
+
+
+def test_undeclared_query_id_in_stream_is_rejected():
+    """An item tagged with a query no spec declares would defer forever
+    and silently vanish from the report — the pipeline must refuse it."""
+    sc = _mq_scenario((QuerySpec(1),), duration_s=5.0)
+    rogue = _items([(0.5, 1, 0.9, True, 7)])
+    with pytest.raises(ValueError, match="undeclared query ids"):
+        run_query(sc, items=rogue)
+
+
+def test_scheme_train_time_fig5_ordering():
+    assert scheme_train_time("no_finetune", 8) == 0.0
+    assert scheme_train_time("surveiledge", 8, step_s=0.05) \
+        == pytest.approx(2.0)
+    assert scheme_train_time("all_finetune", 8, step_s=0.05) \
+        == pytest.approx(16.0)
+    with pytest.raises(ValueError):
+        scheme_train_time("resnet", 8)
