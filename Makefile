@@ -26,10 +26,19 @@ endif
 	fi
 FORCE:
 
-.PHONY: test test-slow lint bench-smoke bench report-gate dev-deps
+.PHONY: test test-slow test-sharded lint bench-smoke bench report-gate dev-deps
 
 test:            ## tier-1 test suite (the verify gate for every PR; excludes slow-marked tests)
 	$(PY) -m pytest -x -q -m "not slow" $(XDIST)
+
+# 8 faked host devices (the flag must be set before jax imports, hence a
+# fresh interpreter): the superstep differential + sharded-vs-single-device
+# equivalence tests actually exercise the shard_map path here, instead of
+# skipping on the single-device default.
+test-sharded:    ## superstep differential + sharding tests under 8 faked host devices
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	$(PY) -m pytest -x -q -m "not slow" \
+	  tests/test_superstep.py tests/test_metrics_stream.py
 
 test-slow:       ## pixel-path + hypothesis-heavy tests (nightly-blocking, per-PR non-blocking CI job)
 	$(PY) -m pytest -q -m slow

@@ -10,6 +10,17 @@ from __future__ import annotations
 import numpy as np
 
 
+def f_score_counts(tp: int, fp: int, fn: int, lam: float = 2.0) -> float:
+    """F_lambda from confusion counts — the one formula both the
+    array path and the streaming aggregates (``metrics.StreamingWindows``)
+    reduce to, so windowed and whole-run scores cannot diverge."""
+    p = tp / max(tp + fp, 1)
+    r = tp / max(tp + fn, 1)
+    if p + r == 0:
+        return 0.0
+    return (1 + lam ** 2) * p * r / (lam ** 2 * p + r)
+
+
 def f_score(decisions: np.ndarray, truths: np.ndarray,
             lam: float = 2.0) -> float:
     """F_lambda of boolean decisions vs boolean ground truth."""
@@ -18,8 +29,4 @@ def f_score(decisions: np.ndarray, truths: np.ndarray,
     tp = int(np.sum(decisions & truths))
     fp = int(np.sum(decisions & ~truths))
     fn = int(np.sum(~decisions & truths))
-    p = tp / max(tp + fp, 1)
-    r = tp / max(tp + fn, 1)
-    if p + r == 0:
-        return 0.0
-    return (1 + lam ** 2) * p * r / (lam ** 2 * p + r)
+    return f_score_counts(tp, fp, fn, lam)

@@ -215,3 +215,43 @@ class ActCtx:
             spec = P(b, *([None] * (x.ndim - 1)))
         return jax.lax.with_sharding_constraint(
             x, NamedSharding(self.mesh, spec))
+
+
+# --- fleet-axis sharding (scan-superstep path) -------------------------------
+#
+# The surveillance fleet's folded (query, edge) row axis is embarrassingly
+# parallel: the fused triage kernel compacts escalations per ROW, and the
+# Eqs. 8-9 scan recurrence is elementwise over rows — no collectives, so a
+# shard_map over a 1-D ("fleet",) mesh (launch.mesh.make_fleet_mesh) runs
+# the kernel shard-local and bit-exactly reproduces the single-device
+# result (asserted by tests/test_superstep.py under
+# XLA_FLAGS=--xla_force_host_platform_device_count=8).
+
+def fleet_axis_size(mesh: Mesh) -> int:
+    return _axis_size(mesh, "fleet")
+
+
+def can_shard_fleet(mesh: Mesh, padded_rows: int) -> bool:
+    """Divisibility guard: the padded row bucket must split evenly across
+    the fleet axis (power-of-two buckets make this true for any
+    power-of-two device count <= the bucket)."""
+    n = fleet_axis_size(mesh)
+    return n > 1 and padded_rows % n == 0
+
+
+def fleet_specs() -> Dict[str, P]:
+    """PartitionSpecs of the superstep slab, keyed by operand role.
+
+    conf (S, R, N) and the triage outputs shard on the row axis R; the
+    (R, 2) threshold carry, the (S, R) update mask and the (R,) per-row
+    drain signal shard the same way; scalar gains replicate."""
+    return {
+        "conf": P(None, "fleet", None),
+        "thresholds": P("fleet", None),
+        "mask": P(None, "fleet"),
+        "drain": P("fleet"),
+        "gains": P(None),
+        "ths_out": P(None, "fleet", None),
+        "routes": P(None, "fleet", None),
+        "slots": P(None, "fleet", None),
+    }

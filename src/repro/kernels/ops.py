@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import buckets as _bk
 from repro.kernels import calibrate as _ca
 from repro.kernels import flash_attention as _fa
 from repro.kernels import framediff as _fd
@@ -144,9 +145,10 @@ def triage_batched(conf: jax.Array, *, alpha: float, beta: float,
     return routes[:n], slots[:n], count
 
 
-def _bucket(n: int, minimum: int = 8) -> int:
-    """Next power-of-two size >= n (jit-cache-stable padding bucket)."""
-    return max(minimum, 1 << (max(n - 1, 1)).bit_length())
+# padding-bucket arithmetic lives in ``kernels/buckets.py`` (jax-free, so
+# the scenario layer can validate fleet dims against the same table);
+# these aliases keep the wrappers' call sites and the historical names
+_bucket = _bk.bucket
 
 
 def score_crops(score_fn, tokens: jax.Array, *, minimum: int = 8) -> jax.Array:
@@ -176,14 +178,7 @@ def _triage_fleet(conf: jax.Array, thresholds: jax.Array, *, capacity: int,
     return _tr.triage_fleet_pallas(conf, thresholds, capacity=capacity)
 
 
-def _bucket_q(q: int) -> int:
-    """Power-of-two bucket for the query axis, minimum 1.
-
-    The query axis stays tiny (a handful of live CQs), so unlike the edge
-    and camera axes it gets no minimum-8 floor: a single-query run pays
-    zero padding and folds to exactly the (E, N) layout it had before the
-    query axis existed."""
-    return 1 if q <= 1 else 1 << (q - 1).bit_length()
+_bucket_q = _bk.bucket_q
 
 
 def triage_fleet(conf: jax.Array, thresholds: jax.Array, *, capacity: int,

@@ -32,6 +32,20 @@ def make_host_mesh() -> Mesh:
                          devices=jax.devices()[:1])
 
 
+def make_fleet_mesh(num_devices: int | None = None) -> Mesh:
+    """1-D mesh over the fleet row axis of the scan-superstep launch.
+
+    The surveillance-fleet workload shards along ONE axis — the folded
+    (query, edge) row axis of the fused triage slab (rows are mutually
+    independent, so the kernel runs shard-local with no collectives; see
+    ``repro.distributed.sharding.fleet_specs``).  On CPU this is
+    exercised with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+    (set by the sharded CI leg); defaults to every visible device."""
+    devices = jax.devices()
+    n = len(devices) if num_devices is None else num_devices
+    return jax.make_mesh((n,), ("fleet",), devices=devices[:n])
+
+
 def chips(mesh: Mesh) -> int:
     n = 1
     for v in mesh.shape.values():

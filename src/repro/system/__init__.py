@@ -14,7 +14,7 @@ orchestrator.
 """
 from repro.system.feedback import FeedbackStage, apply_calibration
 from repro.system.frontend import ConfidenceStreamFrontend, Frontend
-from repro.system.metrics import QueryReport
+from repro.system.metrics import QueryReport, StreamingWindows
 from repro.system.pipeline import QueryPipeline, run_query
 from repro.system.pixel_frontend import PixelFrontend
 from repro.system.queries import DEFAULT_QUERY, QuerySet, QuerySpec
@@ -28,6 +28,7 @@ from repro.system.scenario import (
     frame_schedule,
     heterogeneous_multi_edge,
     homogeneous_multi_edge,
+    metropolis,
     multi_query_city,
     pixel_city,
     query_churn,
@@ -36,9 +37,11 @@ from repro.system.scenario import (
     straggler_edge,
     synthetic_confidence_stream,
 )
+from repro.system.superstep import Ctrl, SuperstepDriver
 
 __all__ = [
     "ConfidenceStreamFrontend",
+    "Ctrl",
     "DEFAULT_QUERY",
     "FeedbackStage",
     "Frontend",
@@ -50,6 +53,8 @@ __all__ = [
     "SCENARIOS",
     "SCHEMES",
     "Scenario",
+    "StreamingWindows",
+    "SuperstepDriver",
     "apply_calibration",
     "bursty_crowds",
     "city_scale",
@@ -57,6 +62,7 @@ __all__ = [
     "frame_schedule",
     "heterogeneous_multi_edge",
     "homogeneous_multi_edge",
+    "metropolis",
     "multi_query_city",
     "pixel_city",
     "query_churn",

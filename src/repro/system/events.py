@@ -47,8 +47,11 @@ class Arrive:
 class TickArrivals:
     """All of one scheduler tick's detections, grouped by home edge.
 
-    The cascade schemes consume this as ONE fused fleet-triage launch."""
+    The cascade schemes consume this as ONE fused fleet-triage launch.
+    ``tick`` is the scheduler tick index (the superstep planner keys its
+    per-tick plan slices by it; -1 for legacy callers that never plan)."""
     batches: Dict[int, List[Item]]
+    tick: int = -1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -138,22 +141,53 @@ class ReleaseTick:
     events win FIFO tie-breaks), keeping the one-launch-per-tick
     invariant; this event only launches if that tick had no arrivals of
     its own."""
+    tick: int = -1
+
+
+#: Host event boundaries for the scan-superstep path: the events that
+#: mutate state the fused tick math reads (query liveness, node liveness,
+#: calibrations, thresholds' drain signals via transport/scheduler load
+#: shifts).  A superstep may only fuse ticks strictly between two
+#: boundaries — an event landing mid-superstep must SPLIT it, never be
+#: absorbed — and the pipeline re-samples its boundary-held control
+#: signals at the first tick after each one.  Pure tick/DES flow
+#: (Sample, Arrive, TickArrivals, Transfer, ServiceDone) never *creates*
+#: a boundary event: every boundary is either pushed at setup or by
+#: another boundary's handler, so the event queue always knows the next
+#: boundary time before a superstep is planned.
+BOUNDARY_EVENTS = (EdgeFail, QueryArrival, TrainDone, QueryRetire,
+                   ModelUpdate, FeedbackTick, ReleaseTick)
 
 
 class EventQueue:
-    """Min-heap of timestamped events with stable FIFO tie-breaking."""
+    """Min-heap of timestamped events with stable FIFO tie-breaking.
+
+    Boundary events (``BOUNDARY_EVENTS``) are additionally tracked in a
+    side heap so the superstep planner can ask for the next boundary time
+    in O(1) without scanning the queue.  Because events pop in global
+    time order, the side heap's minimum always equals a popping boundary
+    event's time, so pops stay O(log n)."""
 
     def __init__(self) -> None:
         self._pq: List[Tuple[float, int, object]] = []
         self._seq = 0
+        self._boundary: List[float] = []
 
     def push(self, t: float, event: object) -> None:
         self._seq += 1
         heapq.heappush(self._pq, (t, self._seq, event))
+        if isinstance(event, BOUNDARY_EVENTS):
+            heapq.heappush(self._boundary, t)
 
     def pop(self) -> Tuple[float, object]:
         t, _, event = heapq.heappop(self._pq)
+        if isinstance(event, BOUNDARY_EVENTS):
+            heapq.heappop(self._boundary)
         return t, event
+
+    def next_boundary(self) -> float:
+        """Earliest boundary-event time still queued (+inf if none)."""
+        return self._boundary[0] if self._boundary else float("inf")
 
     def __bool__(self) -> bool:
         return bool(self._pq)

@@ -64,6 +64,20 @@ def apply_calibration(conf: np.ndarray, a: float, b: float) -> np.ndarray:
     return out
 
 
+def calibrate_row(row: np.ndarray, n: int,
+                  params: Tuple[float, float]) -> None:
+    """Apply one (query, edge) row's live Platt params to its first ``n``
+    lanes in place (identity is a bit-exact no-op; pad lanes stay -1.0).
+
+    Both fused-triage pack paths — the per-tick legacy pack
+    (``triage.TriageStage.triage_tick``) and the scan-superstep slab pack
+    (``system.superstep``) — MUST go through this one helper: the
+    superstep's bit-exactness guarantee against the per-tick driver rests
+    on the calibrated f32 lanes being computed by identical code."""
+    if n and params != IDENTITY:
+        row[:n] = apply_calibration(row[:n], params[0], params[1])
+
+
 class FeedbackStage:
     """Accumulates cloud-labeled escalations; emits fleet model updates."""
 

@@ -10,11 +10,130 @@ and each edge's final adaptive (alpha, beta).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+import math
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.scoring import f_score as _f_score
+from repro.core.scoring import f_score_counts as _f_counts
+
+# log-spaced latency histogram for streaming percentiles: 20 buckets per
+# decade over [1e-4 s, 1e4 s] (+ underflow/overflow).  The p99 read-out
+# returns a bucket's upper edge clamped to the observed maximum, so its
+# relative error is bounded by one bucket width (10^(1/20)-1 ~ 12%).
+_LAT_LO, _LAT_HI, _LAT_BPD = 1e-4, 1e4, 20
+_LAT_BUCKETS = int(round(math.log10(_LAT_HI / _LAT_LO) * _LAT_BPD))
+
+
+def _lat_bucket(lat: float) -> int:
+    if lat <= _LAT_LO:
+        return 0
+    if lat >= _LAT_HI:
+        return _LAT_BUCKETS + 1
+    return 1 + min(_LAT_BUCKETS - 1,
+                   int(math.floor(math.log10(lat / _LAT_LO) * _LAT_BPD)))
+
+
+class _Acc:
+    """One streaming cell: confusion counts + Welford latency moments +
+    the log-bucket latency histogram.  O(1) per item, O(1) memory."""
+
+    __slots__ = ("n", "tp", "fp", "fn", "mean", "m2", "max_lat", "hist")
+
+    def __init__(self) -> None:
+        self.n = 0
+        self.tp = self.fp = self.fn = 0
+        self.mean = 0.0
+        self.m2 = 0.0
+        self.max_lat = 0.0
+        self.hist = np.zeros(_LAT_BUCKETS + 2, np.int64)
+
+    def add(self, lat: float, decision: bool, truth: bool) -> None:
+        self.n += 1
+        if decision and truth:
+            self.tp += 1
+        elif decision:
+            self.fp += 1
+        elif truth:
+            self.fn += 1
+        d = lat - self.mean
+        self.mean += d / self.n
+        self.m2 += d * (lat - self.mean)
+        if lat > self.max_lat:
+            self.max_lat = lat
+        self.hist[_lat_bucket(lat)] += 1
+
+    def f_score(self, lam: float = 2.0) -> float:
+        return _f_counts(self.tp, self.fp, self.fn, lam)
+
+    @property
+    def var(self) -> float:
+        return self.m2 / self.n if self.n else 0.0
+
+    def percentile(self, q: float = 0.99) -> float:
+        """Histogram percentile: upper edge of the rank's bucket, clamped
+        to the observed max (single-sample cells are therefore exact)."""
+        if not self.n:
+            return 0.0
+        rank = max(1, int(math.ceil(q * self.n)))
+        cum = 0
+        for i, c in enumerate(self.hist):
+            cum += int(c)
+            if cum >= rank:
+                if i == 0:
+                    return min(_LAT_LO, self.max_lat)
+                if i > _LAT_BUCKETS:
+                    return self.max_lat
+                edge = _LAT_LO * 10.0 ** (i / _LAT_BPD)
+                return min(edge, self.max_lat)
+        return self.max_lat
+
+
+class StreamingWindows:
+    """Streaming windowed report aggregates: O(windows + queries) memory
+    instead of O(items) arrays.
+
+    The metropolis preset finishes ~10^6 items per run; keeping per-item
+    latency/decision/truth arrays (and then binning them at report time)
+    is the O(items) cost this replaces.  ``add`` folds each finished item
+    into three cells at O(1): the run total, its fixed-width finish-time
+    window (``accuracy_timeline``), and its query's row
+    (``per_query_summary``).  Enabled by ``Scenario.metrics_window_s``;
+    the exact array path stays the default everywhere else."""
+
+    def __init__(self, window_s: float):
+        if window_s <= 0:
+            raise ValueError(f"window_s must be positive, got {window_s}")
+        self.window_s = float(window_s)
+        self.total = _Acc()
+        self.windows: Dict[int, _Acc] = {}
+        self.queries: Dict[int, _Acc] = {}
+
+    @property
+    def n(self) -> int:
+        return self.total.n
+
+    def add(self, t: float, lat: float, decision: bool, truth: bool,
+            query: int) -> None:
+        self.total.add(lat, decision, truth)
+        w = int(t // self.window_s)
+        cell = self.windows.get(w)
+        if cell is None:
+            cell = self.windows[w] = _Acc()
+        cell.add(lat, decision, truth)
+        qcell = self.queries.get(query)
+        if qcell is None:
+            qcell = self.queries[query] = _Acc()
+        qcell.add(lat, decision, truth)
+
+    def timeline(self, lam: float = 2.0) -> List[Dict[str, float]]:
+        """Same row schema as ``QueryReport.accuracy_timeline`` (windows
+        with zero finished items never exist in the dict, so they are
+        omitted exactly like the array path omits them)."""
+        return [{"t_start": round(w * self.window_s, 3), "n": c.n,
+                 "f2": round(c.f_score(lam), 4)}
+                for w, c in sorted(self.windows.items())]
 
 
 @dataclasses.dataclass
@@ -61,24 +180,54 @@ class QueryReport:
     # to transport, never to the node latency estimators)
     wan_transfer_s: float = 0.0
     lan_transfer_s: float = 0.0
+    # --- scan-superstep runtime (Scenario.superstep) --------------------------
+    supersteps: int = 0                    # fused multi-tick device launches
+    triaged_ticks: int = 0                 # ticks that had ready work (the
+    #                                        per-tick driver pays one launch
+    #                                        for each of these; the superstep
+    #                                        driver pays one per boundary-free
+    #                                        run — their ratio is the
+    #                                        host-loop reduction factor)
+    # streaming aggregates (Scenario.metrics_window_s): when set, the
+    # per-item arrays above are EMPTY and every metric below reads the
+    # O(window) cells instead — city-of-cameras runs must not hold (or
+    # sort) per-item arrays at report time
+    stream: Optional[StreamingWindows] = None
+
+    @property
+    def n_items(self) -> int:
+        """Finished items, whichever accumulation path the run used."""
+        return self.stream.n if self.stream is not None \
+            else len(self.latencies)
 
     # --- accuracy -------------------------------------------------------------
     def f_score(self, lam: float = 2.0) -> float:
         """F_lambda (paper uses F2: recall-weighted)."""
+        if self.stream is not None:
+            return self.stream.total.f_score(lam)
         return _f_score(self.decisions, self.truths, lam)
 
     # --- latency --------------------------------------------------------------
     @property
     def avg_latency(self) -> float:
+        if self.stream is not None:
+            return self.stream.total.mean if self.stream.n else 0.0
         return float(np.mean(self.latencies)) if len(self.latencies) else 0.0
 
     @property
     def p99_latency(self) -> float:
+        """p99 finish latency; on the streaming path this is the histogram
+        read-out (exact for single-sample cells, otherwise within one
+        log-bucket of the sorted-array percentile)."""
+        if self.stream is not None:
+            return self.stream.total.percentile(0.99)
         return float(np.percentile(self.latencies, 99)) \
             if len(self.latencies) else 0.0
 
     @property
     def latency_var(self) -> float:
+        if self.stream is not None:
+            return self.stream.total.var
         return float(np.var(self.latencies)) if len(self.latencies) else 0.0
 
     def accuracy_timeline(self, window_s: float = 10.0,
@@ -90,7 +239,14 @@ class QueryReport:
         ``drift_at_s`` and stay down, while the closed loop's climb back
         once the first post-drift ``ModelUpdate`` delivers.  Windows with
         zero finished items are omitted (a NaN row would poison JSON
-        artifact consumers)."""
+        artifact consumers).
+
+        On the streaming path the window width was fixed when the run
+        started (``Scenario.metrics_window_s``); ``window_s`` here is
+        ignored — re-binning would need the per-item arrays the
+        streaming path exists to avoid."""
+        if self.stream is not None:
+            return self.stream.timeline(lam)
         if not len(self.finish_times):
             return []
         out = []
@@ -118,6 +274,21 @@ class QueryReport:
         head-of-query latency (its early detections waited out the
         fine-tune), a ``no_finetune`` query shows ``train_s == 0`` but the
         lowest ``f2``."""
+        if self.stream is not None:
+            out: Dict[int, Dict] = {}
+            known = set(self.queries) | set(self.stream.queries)
+            for q in sorted(int(q) for q in known):
+                c = self.stream.queries.get(q)
+                row = {
+                    "n_items": c.n if c else 0,
+                    "f2": round(c.f_score(lam), 4) if c else 0.0,
+                    "avg_latency_s": round(c.mean, 3) if c else 0.0,
+                    "p99_latency_s": round(c.percentile(0.99), 3)
+                    if c else 0.0,
+                }
+                row.update(self.queries.get(q, {}))
+                out[q] = row
+            return out
         qids = self.query_ids if len(self.query_ids) else \
             np.zeros(len(self.latencies), np.int64)
         out: Dict[int, Dict] = {}
@@ -161,11 +332,17 @@ class QueryReport:
             "ticks": self.ticks,
             "launches_per_tick": round(
                 self.kernel_launches / max(self.ticks, 1), 3),
+            # scan-superstep runtime: 0 supersteps == per-tick driver; a
+            # superstep run's triaged_ticks / supersteps ratio is the
+            # host-loop reduction the fused scan bought
+            "supersteps": self.supersteps,
             # multi-query runtime: the launch columns above NOT scaling
             # with n_queries is the fused-(Q, E, N)-launch proof
             "n_queries": max(1, len(self.queries)
-                             or (len(np.unique(self.query_ids))
-                                 if len(self.query_ids) else 1)),
+                             or (len(self.stream.queries)
+                                 if self.stream is not None
+                                 else (len(np.unique(self.query_ids))
+                                       if len(self.query_ids) else 1))),
             "cloud_train_s": round(self.cloud_train_s, 3),
         }
 

@@ -46,6 +46,7 @@ from repro.serving.bus import Bus, ParamDB
 from repro.serving.simulator import Item
 from repro.system import metrics as MX
 from repro.system.events import (
+    BOUNDARY_EVENTS,
     Arrive,
     EdgeFail,
     EventQueue,
@@ -66,6 +67,7 @@ from repro.system.frontend import ConfidenceStreamFrontend, Frontend
 from repro.system.nodes import NodeBank
 from repro.system.queries import QuerySet
 from repro.system.scenario import Scenario
+from repro.system.superstep import Ctrl, SuperstepDriver
 from repro.system.transport import Transport
 from repro.system.triage import ACCEPT, ESCALATE, TriageStage
 
@@ -139,11 +141,17 @@ class QueryPipeline:
         self.events.push(t + svc, ServiceDone(node, task, svc))
 
     def _finish(self, t: float, node: int, it: Item, decision: bool) -> None:
-        self._lat.append(t - it.t_arrival)
-        self._dec.append(decision)
-        self._tru.append(it.is_query)
-        self._fin.append(t)
-        self._qid.append(it.query)
+        if self._agg is not None:
+            # streaming windowed aggregates (metrics_window_s): O(1) per
+            # item, no per-item arrays held for the report
+            self._agg.add(t, t - it.t_arrival, decision, it.is_query,
+                          it.query)
+        else:
+            self._lat.append(t - it.t_arrival)
+            self._dec.append(decision)
+            self._tru.append(it.is_query)
+            self._fin.append(t)
+            self._qid.append(it.query)
         self.nodes.served[node] += 1
 
     def _dispatch(self, t: float, src: int, task: Task,
@@ -180,8 +188,51 @@ class QueryPipeline:
             task.tx_s += done - t
             self.events.push(done, Transfer(target, task))
 
+    # --- scan-superstep support -----------------------------------------------
+    def _sample_ctrl(self, t: float) -> None:
+        """Sample the Eqs. 8-9 / shed control signals for the superstep
+        path: the Eq. 7 escalation-target drain (incl. WAN backlog for
+        the cloud), every edge's own queue drain, and the overload-shed
+        set.  Called at the first triaged tick after each boundary event
+        (``_ctrl_dirty``) and held until the next one — the resample
+        points are boundary-determined, never K-determined, which is
+        what makes any superstep segmentation bit-exact vs. any other."""
+        try:
+            d = self.sched.select_node(
+                extra_cost={CLOUD: self.transport.wan_backlog(t)})
+        except ValueError:
+            d = CLOUD
+        esc_drain = self.sched.nodes[d].drain_time
+        if d == CLOUD:
+            esc_drain += self.transport.wan_backlog(t)
+        edge_drain = {e: self.sched.nodes[e].drain_time
+                      for e in self.sc.edge_ids}
+        self._ctrl = Ctrl(
+            esc_drain=esc_drain, edge_drain=edge_drain,
+            overloaded=frozenset(
+                e for e, dr in edge_drain.items()
+                if dr > self.sc.offload_drain_s))
+        self._ctrl_dirty = False
+
+    def _ready_of(self, batches: Dict[int, List[Item]]
+                  ) -> Dict[Tuple[int, int], List[Item]]:
+        """Pure (side-effect-free) version of ``_on_tick``'s ready
+        classification, used by the superstep planner on FUTURE ticks.
+        Everything it reads — node liveness, query liveness/retirement —
+        only mutates at boundary events, and plans never span one, so
+        the plan-time result equals the fold-time result exactly."""
+        ready: Dict[Tuple[int, int], List[Item]] = {}
+        for edge, batch in batches.items():
+            if edge in self.nodes.dead:
+                continue
+            for it in batch:
+                if self.queries.live_on(it.query, edge):
+                    ready.setdefault((it.query, edge), []).append(it)
+        return ready
+
     # --- per-tick fused triage ------------------------------------------------
-    def _on_tick(self, t: float, batches: Dict[int, List[Item]]) -> None:
+    def _on_tick(self, t: float, batches: Dict[int, List[Item]],
+                 tick: int = -1) -> None:
         """One scheduler tick's arrivals: failover dead edges' batches,
         defer queries whose CQ weights haven't reached their edge yet, shed
         overloaded edges' raw batches via Eq. 7, triage everything else —
@@ -234,30 +285,62 @@ class QueryPipeline:
                         self._deferred_count.get(it.query, 0) + 1
         if not ready:
             return
-        self.triage_stage.refresh(t, sorted(ready))
-        if self.sc.scheme == "surveiledge":
-            for q, e in ready:
-                st = self.triage_stage.states[(q, e)]
-                tag = f"{e}" if q == self.queries.default else f"{e}q{q}"
-                self.db.put(f"alpha{tag}", st.alpha)
-                self.db.put(f"beta{tag}", st.beta)
-            # a home edge that can't drain its queue within the gate sheds
-            # this tick's raw batch — every query's — across cloud/edges
-            # via Eq. 7 (the overloaded home has maximal Q*t, so it is
-            # effectively skipped)
-            overloaded = {e for _, e in ready
-                          if self.sched.nodes[e].drain_time
-                          > self.sc.offload_drain_s}
-            for key in [k for k in ready if k[1] in overloaded]:
-                for it in ready.pop(key):
-                    self._rerouted += 1
-                    self._dispatch(t, key[1], Task(it, "reclassify", None),
-                                   count_escalated=False, exclude_src=True)
+        self._triaged_ticks += 1
+        if self.superstep.enabled:
+            # scan-superstep path: this tick's routes/thresholds come out
+            # of ONE fused multi-tick launch (built now if this tick
+            # wasn't covered by a previous plan).  Control signals are
+            # boundary-held: resampled at the first triaged tick after
+            # each boundary event, constant in between.
+            if self._ctrl_dirty:
+                self._sample_ctrl(t)
+            outs, ths = self.superstep.tick_out(tick, ready, self._ctrl)
+            if self.sc.scheme == "surveiledge":
+                for q, e in ready:
+                    a, b = ths[(q, e)]
+                    tag = f"{e}" if q == self.queries.default \
+                        else f"{e}q{q}"
+                    self.db.put(f"alpha{tag}", a)
+                    self.db.put(f"beta{tag}", b)
+                for key in [k for k in ready
+                            if k[1] in self._ctrl.overloaded]:
+                    for it in ready.pop(key):
+                        self._rerouted += 1
+                        self._dispatch(t, key[1],
+                                       Task(it, "reclassify", None),
+                                       count_escalated=False,
+                                       exclude_src=True)
+        else:
+            self.triage_stage.refresh(t, sorted(ready))
+            if self.sc.scheme == "surveiledge":
+                for q, e in ready:
+                    st = self.triage_stage.states[(q, e)]
+                    tag = f"{e}" if q == self.queries.default \
+                        else f"{e}q{q}"
+                    self.db.put(f"alpha{tag}", st.alpha)
+                    self.db.put(f"beta{tag}", st.beta)
+                # a home edge that can't drain its queue within the gate
+                # sheds this tick's raw batch — every query's — across
+                # cloud/edges via Eq. 7 (the overloaded home has maximal
+                # Q*t, so it is effectively skipped)
+                overloaded = {e for _, e in ready
+                              if self.sched.nodes[e].drain_time
+                              > self.sc.offload_drain_s}
+                for key in [k for k in ready if k[1] in overloaded]:
+                    for it in ready.pop(key):
+                        self._rerouted += 1
+                        self._dispatch(t, key[1],
+                                       Task(it, "reclassify", None),
+                                       count_escalated=False,
+                                       exclude_src=True)
+            if not ready:
+                return
+            outs = self.triage_stage.triage_tick(ready)
         if not ready:
             return
-        for (q, edge), (routes, slots, conf_used) in \
-                self.triage_stage.triage_tick(ready).items():
-            for it, route, slot, cal in zip(ready[(q, edge)], routes, slots,
+        for (q, edge), items in ready.items():
+            routes, slots, conf_used = outs[(q, edge)]
+            for it, route, slot, cal in zip(items, routes, slots,
                                             conf_used):
                 if route == ESCALATE and slot >= 0:
                     decision = None                 # cloud-model's call
@@ -362,6 +445,18 @@ class QueryPipeline:
         self._deferred_count: Dict[int, int] = {}
         self._train_total = 0.0
         tick_samples: List[Dict[int, int]] = []
+        # streaming windowed aggregates (metrics_window_s): the per-item
+        # report arrays stay empty and _finish folds into O(window) cells
+        self._agg = MX.StreamingWindows(sc.metrics_window_s) \
+            if sc.metrics_window_s is not None else None
+        # scan-superstep driver (Scenario.superstep): fuses boundary-free
+        # runs of ticks into one jitted scan + triage launch
+        self.superstep = SuperstepDriver(self)
+        self._ctrl: Optional[Ctrl] = None
+        self._ctrl_dirty = True
+        self._triaged_ticks = 0
+        self._tick_batches: Dict[int, Dict[int, List[Item]]] = {}
+        self._tick_order: List[int] = []
 
         # an item tagged with an undeclared query would defer forever (no
         # lifecycle events ever activate it) and silently vanish from the
@@ -384,8 +479,12 @@ class QueryPipeline:
                 self.events.push(it.t_arrival, Arrive(it))
         else:
             for k, batches in group_arrivals(items, sc.interval_s):
+                # kept (sorted) for the superstep planner, which packs
+                # future arrival ticks into the current fused launch
+                self._tick_batches[k] = batches
+                self._tick_order.append(k)
                 self.events.push((k + 1) * sc.interval_s,
-                                 TickArrivals(batches))
+                                 TickArrivals(batches, k))
         for k in range(1, n_ticks + 1):
             self.events.push(k * sc.interval_s, Sample())
         for t_fail, node in sc.failures:
@@ -405,6 +504,12 @@ class QueryPipeline:
 
         while self.events:
             t, ev = self.events.pop()
+            if isinstance(ev, BOUNDARY_EVENTS):
+                # boundary events mutate state the fused superstep math
+                # reads: the boundary-held control signals resample at
+                # the next triaged tick (and plans never span this pop —
+                # the planner stopped strictly before it)
+                self._ctrl_dirty = True
             if isinstance(ev, Sample):
                 tick_samples.append({
                     n: self.nodes.occupancy(n) for n in self.service_s})
@@ -415,7 +520,7 @@ class QueryPipeline:
                 task.tx_s = done - t
                 self.events.push(done, Transfer(CLOUD, task))
             elif isinstance(ev, TickArrivals):
-                self._on_tick(t, ev.batches)
+                self._on_tick(t, ev.batches, ev.tick)
             elif isinstance(ev, Transfer):
                 if ev.node in self.nodes.dead:   # died while in transit
                     self._rerouted += 1
@@ -461,7 +566,7 @@ class QueryPipeline:
                 # only fires a launch if this tick boundary had no natural
                 # TickArrivals (which would have absorbed the release)
                 if self._release:
-                    self._on_tick(t, {})
+                    self._on_tick(t, {}, ev.tick)
             elif isinstance(ev, FeedbackTick):
                 # one fused fleet recalibration launch; the per-row
                 # results land as ModelUpdate events at downlink delivery
@@ -479,7 +584,8 @@ class QueryPipeline:
                         self._release.setdefault(ev.edge, []).extend(pend)
                         self.events.push(
                             (math.floor(t / sc.interval_s) + 1)
-                            * sc.interval_s, ReleaseTick())
+                            * sc.interval_s,
+                            ReleaseTick(int(math.floor(t / sc.interval_s))))
                 elif ev.edge not in self.nodes.dead \
                         and not self.queries.is_retired(ev.query):
                     # a calibration that retired mid-flight must not undo
@@ -526,6 +632,9 @@ class QueryPipeline:
             escalated=self._escalated,
             rerouted=self._rerouted,
             kernel_launches=self.triage_stage.launches,
+            supersteps=self.superstep.supersteps,
+            triaged_ticks=self._triaged_ticks,
+            stream=self._agg,
             ticks=n_ticks,
             queue_timeline=MX.merge_timelines(tick_samples),
             per_node_busy=dict(self.nodes.busy_s),

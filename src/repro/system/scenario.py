@@ -20,6 +20,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.data import synthetic_video as SV
+from repro.kernels.buckets import validate_fleet_dims
 from repro.serving.simulator import Item
 from repro.system.queries import QuerySpec
 
@@ -101,6 +102,25 @@ class Scenario:
     items: Optional[Sequence[Item]] = None   # injected pre-scored stream
     frame_hw: Optional[Tuple[int, int]] = None   # pixel path: camera frame
     #                                              size override (H, W)
+    # --- superstep execution (metropolis scale) -------------------------------
+    # None runs the legacy per-tick live-signal loop (bit-identical to every
+    # pre-superstep release).  K >= 1 switches the cascade schemes to
+    # boundary-sampled control semantics: the Eqs. 8-9 drain signals and the
+    # overload-shedding gate are sampled once per host event boundary (query
+    # lifecycle, failures, model deliveries, feedback ticks) and held
+    # constant between boundaries, which makes results invariant to K — up
+    # to K consecutive ticks then fuse into ONE jitted lax.scan superstep
+    # (system/superstep.py).  K=1 is the same semantics driven tick by tick:
+    # the differential harness proves K=1 == K=N bit-exactly.
+    superstep: Optional[int] = None
+    # shard the superstep's folded row axis across jax devices (no-op on a
+    # single device; exercised on CPU via
+    # XLA_FLAGS=--xla_force_host_platform_device_count=8)
+    shard_fleet: bool = False
+    # accumulate the report in streaming windowed aggregates of this width
+    # instead of O(items) per-item arrays (system/metrics.py); None keeps
+    # the exact per-item arrays
+    metrics_window_s: Optional[float] = None
 
     def __post_init__(self):
         # plain ValueError, never assert: `python -O` strips asserts, and a
@@ -135,6 +155,32 @@ class Scenario:
             raise ValueError(
                 f"scenario {self.name!r}: train_step_s={self.train_step_s} "
                 f"must be >= 0")
+        if self.interval_s <= 0:
+            raise ValueError(
+                f"scenario {self.name!r}: interval_s={self.interval_s} "
+                f"must be positive")
+        if self.duration_s <= 0:
+            raise ValueError(
+                f"scenario {self.name!r}: duration_s={self.duration_s} "
+                f"must be positive")
+        if self.num_cameras < 1:
+            raise ValueError(
+                f"scenario {self.name!r}: num_cameras={self.num_cameras} "
+                f"must be >= 1")
+        # fleet dims checked against the kernel padding-bucket table here,
+        # where the numbers are still legible — not at first launch, where
+        # an oversized fold surfaces as an opaque Pallas shape error
+        validate_fleet_dims(self.name, len(self.query_ids), self.num_edges,
+                            self.escalation_capacity)
+        if self.superstep is not None and self.superstep < 1:
+            raise ValueError(
+                f"scenario {self.name!r}: superstep={self.superstep} must "
+                f"be >= 1 (or None for the legacy per-tick loop)")
+        if self.metrics_window_s is not None and self.metrics_window_s <= 0:
+            raise ValueError(
+                f"scenario {self.name!r}: metrics_window_s="
+                f"{self.metrics_window_s} must be positive (or None for "
+                f"per-item arrays)")
 
     @property
     def num_edges(self) -> int:
@@ -340,6 +386,79 @@ def city_scale(num_cameras: int = 512, num_edges: int = 64,
                     **kw)
 
 
+def metropolis(num_cameras: int = 10240, num_edges: int = 1024,
+               num_queries: int = 24, num_failures: int = 3,
+               **kw) -> Scenario:
+    """Metropolis operating point: >= 1024 edges, ~10k cameras, dozens of
+    concurrent CQs, 10 Hz sampling — the scale where per-tick Python
+    dispatch dominates wall clock long before the kernels do, and the
+    reason the scan-superstep path exists.
+
+    The floors are pinned like ``city_scale``'s: >= 1024 edges, and at
+    least one camera per edge.  Runs with ``superstep=128`` (boundary-free
+    tick runs fuse into ONE jitted ``lax.scan`` superstep each),
+    ``shard_fleet=True`` (the folded row axis splits across whatever jax
+    devices exist — a no-op on one device), and streaming windowed report
+    aggregates (``metrics_window_s``) so report memory is O(windows), not
+    O(items).
+
+    The workload shape is chosen so boundary events cluster in the opening
+    act: every query registers within the first 2% of the run (city
+    operators set up their query book up front), the per-edge CQ weight
+    pushes drain over a fat downlink shortly after (each delivery is a
+    host boundary — 24 queries x 1024 edges of them — so they must
+    finish early or they fragment every superstep), and the rolling edge
+    failures land inside that same window — after which the fleet serves
+    dozens of concurrent queries across long boundary-free stretches,
+    which is precisely where one superstep replaces up to K host-loop
+    iterations.  The online recalibration loop stays off by default: each
+    calibration shipment's delivery is a host boundary, and at this scale
+    the study of interest is fleet orchestration, not the feedback loop
+    (``drifting_city`` remains its measuring stick; pass
+    ``update_period_s=...`` to combine them).
+    """
+    num_edges = max(num_edges, 1024)
+    num_cameras = max(num_cameras, num_edges)
+    num_queries = max(num_queries, 12)
+    duration = kw.pop("duration_s", 60.0)
+    interval = kw.pop("interval_s", 0.1)
+    seed = kw.pop("seed", 0)
+    rng = np.random.default_rng(seed + 177)
+    speeds = tuple(float(s) for s in rng.choice(
+        (0.25, 0.5, 1.0, 2.0), size=num_edges, p=(0.15, 0.3, 0.4, 0.15)))
+    fail_edges = rng.choice(np.arange(1, num_edges + 1),
+                            size=num_failures, replace=False)
+    failures = tuple(
+        (duration * (0.04 + 0.015 * i), int(e))
+        for i, e in enumerate(fail_edges))
+    queries = kw.pop("queries", tuple(
+        QuerySpec(q,
+                  t_arrive_s=duration * 0.02 * q / num_queries,
+                  t_retire_s=duration * 0.95 if q >= num_queries - 2
+                  else None,
+                  train_scheme="no_finetune" if q % 3 == 2
+                  else "surveiledge")
+        for q in range(num_queries)))
+    return Scenario(name="metropolis", edge_speeds=speeds,
+                    num_cameras=num_cameras, duration_s=duration,
+                    interval_s=interval, seed=seed, failures=failures,
+                    queries=queries,
+                    burst_rate=kw.pop("burst_rate", 0.02),
+                    escalation_capacity=kw.pop("escalation_capacity", 8),
+                    edge_service_s=kw.pop("edge_service_s", 0.05),
+                    uplink_MBps=kw.pop("uplink_MBps", 16.0),
+                    downlink_MBps=kw.pop("downlink_MBps", 2000.0),
+                    lan_MBps=kw.pop("lan_MBps", 100.0),
+                    cloud_speedup=kw.pop("cloud_speedup", 80.0),
+                    cq_nbytes=kw.pop("cq_nbytes", 32 * 1024),
+                    train_step_s=kw.pop("train_step_s", duration / 4000.0),
+                    superstep=kw.pop("superstep", 128),
+                    shard_fleet=kw.pop("shard_fleet", True),
+                    metrics_window_s=kw.pop("metrics_window_s",
+                                            duration / 12.0),
+                    **kw)
+
+
 def drifting_city(num_cameras: int = 12, num_edges: int = 4,
                   **kw) -> Scenario:
     """Concept drift mid-run: the edge CQ model's confidence distribution
@@ -464,6 +583,7 @@ SCENARIOS: Dict[str, Callable[..., Scenario]] = {
     "bursty_crowds": bursty_crowds,
     "straggler_edge": straggler_edge,
     "city_scale": city_scale,
+    "metropolis": metropolis,
     "drifting_city": drifting_city,
     "multi_query_city": multi_query_city,
     "query_churn": query_churn,

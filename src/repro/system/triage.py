@@ -34,7 +34,7 @@ from repro.core.scheduler import CLOUD, Scheduler
 from repro.core.thresholds import ThresholdState
 from repro.kernels import ops
 from repro.serving.simulator import Item
-from repro.system.feedback import IDENTITY, apply_calibration
+from repro.system.feedback import IDENTITY, calibrate_row
 from repro.system.scenario import Scenario
 from repro.system.transport import Transport
 
@@ -124,11 +124,10 @@ class TriageStage:
         for (q, e), items in batches.items():
             row = conf[qi[q], ei[e]]
             row[:len(items)] = [it.conf for it in items]
-            a, b = self.calibrations[(q, e)]
-            if (a, b) != IDENTITY:
-                # live recalibration from the cloud->edge feedback loop;
-                # pad lanes stay -1.0 (always 'reject', never a slot)
-                row[:len(items)] = apply_calibration(row[:len(items)], a, b)
+            # live recalibration from the cloud->edge feedback loop; pad
+            # lanes stay -1.0 (always 'reject', never a slot).  Shared
+            # with the superstep slab pack — see feedback.calibrate_row.
+            calibrate_row(row, len(items), self.calibrations[(q, e)])
             st = self.states[(q, e)]
             thresholds[qi[q], ei[e]] = (st.alpha, st.beta)
         routes, slots, _ = ops.triage_fleet(

@@ -1,0 +1,160 @@
+"""Streaming windowed report aggregates (``metrics.StreamingWindows``):
+equivalence against the exact per-item array path on a real run, plus
+the cell-level edge cases — empty report, single-sample windows,
+histogram under/overflow, a window wider than the whole run, and a
+query retiring mid-window."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.system import QueryReport, StreamingWindows, multi_query_city, \
+    run_query
+from repro.system.metrics import _Acc, merge_timelines
+
+_WINDOW = 5.0
+
+
+@pytest.fixture(scope="module")
+def paired_reports():
+    """The same deterministic run accumulated both ways: exact per-item
+    arrays vs streaming windowed cells of width ``_WINDOW``."""
+    base = multi_query_city(duration_s=30.0)
+    exact = run_query(base)
+    stream = run_query(dataclasses.replace(base, metrics_window_s=_WINDOW))
+    return exact, stream
+
+
+# --- equivalence against the array path ---------------------------------------
+
+
+def test_stream_run_drops_per_item_arrays(paired_reports):
+    exact, stream = paired_reports
+    assert stream.stream is not None and exact.stream is None
+    assert len(stream.latencies) == 0
+    assert stream.n_items == exact.n_items == len(exact.latencies) > 0
+
+
+def test_stream_f2_exact(paired_reports):
+    """F2 reduces to confusion counts on both paths (one shared
+    ``f_score_counts``), so it must agree exactly — not approximately."""
+    exact, stream = paired_reports
+    assert stream.f_score(2.0) == exact.f_score(2.0)
+    assert stream.summary()["accuracy_F2"] == exact.summary()["accuracy_F2"]
+
+
+def test_stream_latency_moments_match(paired_reports):
+    exact, stream = paired_reports
+    np.testing.assert_allclose(stream.avg_latency, exact.avg_latency,
+                               rtol=1e-9)
+    np.testing.assert_allclose(stream.latency_var, exact.latency_var,
+                               rtol=1e-9)
+
+
+def test_stream_p99_within_one_log_bucket(paired_reports):
+    """The histogram read-out returns a bucket's upper edge clamped to
+    the observed max: never below the sorted-array percentile's floor
+    order stat's bucket, and at most one bucket width (~12%) above."""
+    exact, stream = paired_reports
+    assert stream.p99_latency <= exact.latencies.max()
+    np.testing.assert_allclose(stream.p99_latency, exact.p99_latency,
+                               rtol=0.15)
+
+
+def test_stream_timeline_rows_exact(paired_reports):
+    """Window rows carry counts and count-derived F2 — both exact, so
+    the streaming timeline must equal the array path binned at the same
+    width (including the omission of empty windows)."""
+    exact, stream = paired_reports
+    assert stream.accuracy_timeline() == exact.accuracy_timeline(
+        window_s=_WINDOW)
+
+
+def test_stream_per_query_rows_match(paired_reports):
+    exact, stream = paired_reports
+    pe, ps = exact.per_query_summary(), stream.per_query_summary()
+    assert set(pe) == set(ps)
+    for q in pe:
+        assert ps[q]["n_items"] == pe[q]["n_items"]
+        assert ps[q]["f2"] == pe[q]["f2"]
+        # lifecycle facts come from the pipeline, not the accumulator
+        assert ps[q]["train_scheme"] == pe[q]["train_scheme"]
+        assert ps[q]["t_retire_s"] == pe[q]["t_retire_s"]
+
+
+def test_stream_query_retiring_mid_window(paired_reports):
+    """q1 retires at 85% of the run — mid-window for any 5 s binning.
+    Its cell must stop growing at retirement yet keep its full history:
+    the per-query row still reports every item it ever finished."""
+    _, stream = paired_reports
+    row = stream.per_query_summary()[1]
+    assert row["t_retire_s"] is not None
+    assert row["n_items"] == stream.stream.queries[1].n > 0
+    # items from a retired query stay inside the total too
+    assert stream.n_items == sum(c.n for c in stream.stream.queries.values())
+
+
+# --- cell-level edge cases ----------------------------------------------------
+
+
+def _report(**kw):
+    z = np.zeros(0)
+    zb = np.zeros(0, bool)
+    base = dict(scenario="t", scheme="surveiledge", latencies=z,
+                decisions=zb, truths=zb, finish_times=z, uploaded_bytes=0,
+                lan_bytes=0, escalated=0, rerouted=0, kernel_launches=0,
+                ticks=0, queue_timeline={}, per_node_busy={},
+                per_node_served={})
+    base.update(kw)
+    return QueryReport(**base)
+
+
+def test_empty_streaming_report_is_all_zero():
+    r = _report(stream=StreamingWindows(_WINDOW))
+    assert r.n_items == 0
+    assert r.f_score() == 0.0
+    assert r.avg_latency == 0.0 and r.p99_latency == 0.0
+    assert r.latency_var == 0.0
+    assert r.accuracy_timeline() == []
+    assert r.per_query_summary() == {}
+
+
+def test_empty_array_report_timeline_is_empty():
+    assert _report().accuracy_timeline() == []
+
+
+def test_window_wider_than_run_collapses_to_one_row():
+    sw = StreamingWindows(1e6)
+    for t, lat in ((0.5, 0.1), (40.0, 0.2), (99.0, 0.3)):
+        sw.add(t, lat, True, True, query=0)
+    rows = sw.timeline()
+    assert rows == [{"t_start": 0.0, "n": 3, "f2": 1.0}]
+
+
+def test_single_sample_window_p99_is_exact():
+    a = _Acc()
+    a.add(0.37, True, True)
+    assert a.percentile(0.99) == 0.37
+    assert a.mean == 0.37 and a.var == 0.0
+
+
+def test_histogram_under_and_overflow_clamp_to_observed():
+    lo, hi = _Acc(), _Acc()
+    lo.add(1e-6, True, True)          # below the 1e-4 histogram floor
+    hi.add(12345.0, True, True)       # above the 1e4 ceiling
+    assert lo.percentile(0.99) == 1e-6
+    assert hi.percentile(0.99) == 12345.0
+
+
+def test_streaming_windows_rejects_nonpositive_width():
+    with pytest.raises(ValueError, match="window_s"):
+        StreamingWindows(0.0)
+
+
+def test_merge_timelines():
+    samples = [{0: 1, 7: 2}, {0: 3, 7: 0}, {0: 0, 7: 5}]
+    out = merge_timelines(samples)
+    assert set(out) == {0, 7}
+    np.testing.assert_array_equal(out[0], [1, 3, 0])
+    np.testing.assert_array_equal(out[7], [2, 0, 5])
+    assert merge_timelines([]) == {}
