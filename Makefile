@@ -26,7 +26,8 @@ endif
 	fi
 FORCE:
 
-.PHONY: test test-slow test-sharded lint bench-smoke bench report-gate dev-deps
+.PHONY: test test-slow test-sharded test-compiled lint bench-smoke bench \
+	report-gate bench-gate dev-deps
 
 test:            ## tier-1 test suite (the verify gate for every PR; excludes slow-marked tests)
 	$(PY) -m pytest -x -q -m "not slow" $(XDIST)
@@ -42,6 +43,14 @@ test-sharded:    ## superstep differential + sharding tests under 8 faked host d
 
 test-slow:       ## pixel-path + hypothesis-heavy tests (nightly-blocking, per-PR non-blocking CI job)
 	$(PY) -m pytest -q -m slow
+
+# Pixel-path tests with the interpret knob OFF: on a TPU runtime this
+# exercises the real compiled Pallas lowering; on plain CPU (the GitHub
+# runner) the launching tests skip cleanly via the compiled_available()
+# probe and only the backend-free ones run — a green-but-skipped run here
+# is expected, a FAILED one means the compiled path or the probe broke.
+test-compiled:   ## pixel-cascade tests under REPRO_PALLAS_INTERPRET=0 (compiled Pallas where the backend lowers it)
+	REPRO_PALLAS_INTERPRET=0 $(PY) -m pytest -x -q -rs tests/test_pixel_cascade.py
 
 lint:            ## ruff check (CI blocks on this; skipped when ruff is absent)
 	@if $(PY) -m ruff --version >/dev/null 2>&1; then \
@@ -63,6 +72,15 @@ report-gate:     ## regenerate all scenario reports into a scratch dir and diff 
 	rm -rf $(REPORT_FRESH)
 	$(PY) examples/run_scenarios.py --scenario all --cameras 4 --duration 30 --json-out $(REPORT_FRESH)
 	$(PY) benchmarks/report_gate.py --fresh $(REPORT_FRESH) --baseline reports
+
+BENCH_FRESH := .cache/bench-fresh
+bench-gate:      ## regenerate BENCH_pixel_cascade.json into a scratch dir and diff vs the committed baseline (one-sided >30% throughput regression fails)
+	rm -rf $(BENCH_FRESH) && mkdir -p $(BENCH_FRESH)
+	$(PY) -c "from benchmarks.kernel_bench import pixel_cascade_bench; \
+	  pixel_cascade_bench(out_path='$(BENCH_FRESH)/BENCH_pixel_cascade.json')"
+	$(PY) benchmarks/report_gate.py \
+	  --bench-fresh $(BENCH_FRESH)/BENCH_pixel_cascade.json \
+	  --bench-baseline benchmarks/BENCH_pixel_cascade.json
 
 bench:           ## full paper tables/figures (fine-tunes the workload; slow)
 	$(PY) -m benchmarks.run

@@ -27,8 +27,20 @@ baselines in place (``make bench-smoke`` writes into ``reports/``) and
 committing the diff — which the PR reviewer then sees as numbers, not as
 a silently mutated artifact.
 
+The same gate also covers the kernel-bench trajectory: ``--bench-fresh``
+diffs a freshly generated ``BENCH_pixel_cascade.json`` against the
+committed baseline and fails on a >30% ONE-SIDED throughput regression
+(fused or staged rows getting slower; getting faster never breaches —
+wall-clock microbenchmarks are noisy upward, regressions are the signal).
+A fresh file whose substrate differs from the baseline's (e.g. compiled
+Pallas became available) is reported as a structural breach so the
+baseline gets re-blessed deliberately.
+
   PYTHONPATH=src python benchmarks/report_gate.py --fresh .cache/reports-fresh
   PYTHONPATH=src python benchmarks/report_gate.py --fresh DIR --baseline reports
+  PYTHONPATH=src python benchmarks/report_gate.py \
+      --bench-fresh .cache/BENCH_pixel_cascade.json \
+      --bench-baseline benchmarks/BENCH_pixel_cascade.json
 """
 from __future__ import annotations
 
@@ -142,27 +154,105 @@ def gate(fresh_dir: str, baseline_dir: str) -> List[str]:
     return breaches
 
 
+#: one-sided relative throughput band for the kernel-bench gate: a fresh
+#: Mpx_s more than this fraction BELOW baseline is a breach (faster is not)
+BENCH_REGRESSION_BAND = 0.30
+
+
+def bench_gate(fresh_path: str, baseline_path: str) -> List[str]:
+    """Diff a fresh BENCH_pixel_cascade.json against the committed one.
+
+    One-sided: only throughput (``Mpx_s``) drops beyond
+    ``BENCH_REGRESSION_BAND`` breach.  Structure (shapes, rows) and the
+    recorded substrate must match — a substrate flip (interpret baseline
+    vs newly available compiled Pallas) is a deliberate re-bless, not
+    noise to absorb.
+    """
+    with open(baseline_path) as fh:
+        base = json.load(fh)
+    with open(fresh_path) as fh:
+        fresh = json.load(fh)
+    breaches: List[str] = []
+    b_shapes = base.get("shapes", {})
+    f_shapes = fresh.get("shapes", {})
+    for key in sorted(set(b_shapes) | set(f_shapes)):
+        if key not in f_shapes:
+            breaches.append(f"{key}: shape missing from fresh bench")
+            continue
+        if key not in b_shapes:
+            breaches.append(f"{key}: shape has no committed baseline "
+                            f"(regenerate BENCH_pixel_cascade.json and "
+                            f"commit)")
+            continue
+        b_rows = b_shapes[key].get("rows", {})
+        f_rows = f_shapes[key].get("rows", {})
+        for row in sorted(set(b_rows) | set(f_rows)):
+            tag = f"{key}/{row}"
+            if row not in f_rows:
+                breaches.append(f"{tag}: row missing from fresh bench")
+                continue
+            if row not in b_rows:
+                breaches.append(f"{tag}: row has no committed baseline")
+                continue
+            b_sub = b_rows[row].get("substrate")
+            f_sub = f_rows[row].get("substrate")
+            if b_sub != f_sub:
+                breaches.append(
+                    f"{tag}: substrate changed {b_sub} -> {f_sub} "
+                    f"(re-bless the baseline deliberately)")
+                continue
+            b_tp = float(b_rows[row]["Mpx_s"])
+            f_tp = float(f_rows[row]["Mpx_s"])
+            if f_tp < b_tp * (1.0 - BENCH_REGRESSION_BAND):
+                breaches.append(
+                    f"{tag}: throughput {f_tp} Mpx/s is more than "
+                    f"{BENCH_REGRESSION_BAND:.0%} below baseline "
+                    f"{b_tp} Mpx/s")
+    return breaches
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--fresh", required=True,
+    ap.add_argument("--fresh",
                     help="directory of freshly generated scenario reports")
     ap.add_argument("--baseline", default="reports",
                     help="directory of committed baselines (default: "
                          "reports/)")
+    ap.add_argument("--bench-fresh",
+                    help="freshly generated BENCH_pixel_cascade.json to "
+                         "gate against --bench-baseline")
+    ap.add_argument("--bench-baseline",
+                    default=os.path.join("benchmarks",
+                                         "BENCH_pixel_cascade.json"),
+                    help="committed bench baseline (default: "
+                         "benchmarks/BENCH_pixel_cascade.json)")
     args = ap.parse_args()
-    if not glob.glob(os.path.join(args.fresh, "*.json")):
-        print(f"report-gate: no fresh reports in {args.fresh}",
-              file=sys.stderr)
-        return 2
-    breaches = gate(args.fresh, args.baseline)
+    if not args.fresh and not args.bench_fresh:
+        ap.error("need --fresh and/or --bench-fresh")
+    breaches: List[str] = []
+    n = 0
+    if args.fresh:
+        if not glob.glob(os.path.join(args.fresh, "*.json")):
+            print(f"report-gate: no fresh reports in {args.fresh}",
+                  file=sys.stderr)
+            return 2
+        breaches.extend(gate(args.fresh, args.baseline))
+        n += len(glob.glob(os.path.join(args.fresh, "*.json")))
+    if args.bench_fresh:
+        if not os.path.exists(args.bench_fresh):
+            print(f"report-gate: no fresh bench at {args.bench_fresh}",
+                  file=sys.stderr)
+            return 2
+        breaches.extend(f"bench: {b}"
+                        for b in bench_gate(args.bench_fresh,
+                                            args.bench_baseline))
+        n += 1
     if breaches:
-        print(f"report-gate: {len(breaches)} breach(es) vs "
-              f"{args.baseline}/:", file=sys.stderr)
+        print(f"report-gate: {len(breaches)} breach(es):", file=sys.stderr)
         for b in breaches:
             print(f"  BREACH {b}", file=sys.stderr)
         return 1
-    n = len(glob.glob(os.path.join(args.fresh, "*.json")))
-    print(f"report-gate: {n} report(s) within tolerance of {args.baseline}/")
+    print(f"report-gate: {n} artifact(s) within tolerance")
     return 0
 
 

@@ -1,7 +1,14 @@
 """The full moving-object detection stage (paper §IV-C), end to end.
 
-frames -> frame difference (Pallas) -> dilate/erode (Pallas) -> CCL ->
-filtered bounding boxes -> crops ready for the cascade classifier.
+frames -> fused pixel cascade (ONE Pallas launch: framediff + dilate +
+erode + foreground count) -> CCL -> filtered bounding boxes -> crops
+ready for the cascade classifier.
+
+``fused=False`` keeps the original staged chain — three separate Pallas
+launches — as the differential reference; ``use_pallas=False`` drops to
+the jnp oracle.  The fused path's per-camera foreground counts let
+``detect`` skip the CCL fixpoint entirely on motionless ticks and skip
+box extraction for motionless cameras without re-reducing the mask.
 """
 from __future__ import annotations
 
@@ -23,17 +30,16 @@ class Detection:
 
 
 def motion_mask(f0: jax.Array, f1: jax.Array, f2: jax.Array, *,
-                threshold: int = 40,
-                use_pallas: bool = True) -> jax.Array:
+                threshold: int = 40, use_pallas: bool = True,
+                fused: bool = True) -> jax.Array:
     """Eqs. 1-6: framediff + dilate + erode.  (B,H,W,3)x3 -> (B,H,W)."""
-    m = ops.framediff(f0, f1, f2, threshold=threshold, use_pallas=use_pallas)
-    m = ops.dilate3x3(m, use_pallas=use_pallas)
-    m = ops.erode3x3(m, use_pallas=use_pallas)
-    return m
+    mask, _ = ops.pixel_cascade(f0, f1, f2, threshold=threshold,
+                                use_pallas=use_pallas, fused=fused)
+    return mask
 
 
 def detect(frames: np.ndarray, *, threshold: int = 40, crop: int = 32,
-           min_area: int = 12, use_pallas: bool = True
+           min_area: int = 12, use_pallas: bool = True, fused: bool = True
            ) -> List[List[Detection]]:
     """frames: (3, H, W, 3) consecutive triple (or (B,3,H,W,3)).
 
@@ -44,11 +50,19 @@ def detect(frames: np.ndarray, *, threshold: int = 40, crop: int = 32,
         arr = arr[None]
     B = arr.shape[0]
     f0, f1, f2 = (jnp.asarray(arr[:, i]) for i in range(3))
-    mask = motion_mask(f0, f1, f2, threshold=threshold, use_pallas=use_pallas)
+    mask, counts = ops.pixel_cascade(f0, f1, f2, threshold=threshold,
+                                     use_pallas=use_pallas, fused=fused)
+    counts_np = np.asarray(counts)
+    if not counts_np.any():
+        # motionless tick: no foreground anywhere — skip the CCL fixpoint
+        return [[] for _ in range(B)]
     labels = components.label_components(mask)
     labels_np = np.asarray(labels)
     out: List[List[Detection]] = []
     for b in range(B):
+        if counts_np[b] == 0:
+            out.append([])        # motionless camera: no boxes to extract
+            continue
         boxes = components.extract_boxes(labels_np[b], min_area=min_area)
         dets = []
         for box in boxes:

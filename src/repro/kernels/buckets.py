@@ -27,6 +27,57 @@ MAX_FLEET_ROWS = 1 << 17
 #: largest padded element count (S·R·N) of one scan-superstep triage slab
 MAX_SUPERSTEP_ELEMS = 1 << 22
 
+# --- pixel-cascade frame tiles ------------------------------------------------
+# The fused pixel-cascade kernel (``kernels/pixel_cascade.py``) walks each
+# camera's frame in (FRAME_BAND_H, W) row bands with the W axis padded to
+# lane multiples; the staged morphology kernels use the same band height.
+# These are the numbers ``validate_frame_hw`` checks a Scenario.frame_hw
+# against, so a bad frame size raises here — with the padded tile spelled
+# out — instead of as a Pallas block-shape error at first render.
+
+#: output rows per pixel-cascade band (the stencil pipeline's block height)
+FRAME_BAND_H = 32
+
+#: lane-aligned width multiple every frame pads up to before a launch
+FRAME_LANE_W = 128
+
+#: smallest frame side the cascade's 3x3 stencil halos make sense for
+MIN_FRAME_SIDE = 16
+
+#: largest padded per-camera pixel count (H_pad * W_pad) of one frame —
+#: bounds the interpret-mode slab like ``MAX_FLEET_ROWS`` bounds triage
+MAX_FRAME_ELEMS = 1 << 22
+
+
+def frame_pad(h: int, w: int):
+    """Padded (H, W) the pixel kernels actually launch for a (h, w) frame."""
+    hp = -(-h // FRAME_BAND_H) * FRAME_BAND_H
+    wp = -(-w // FRAME_LANE_W) * FRAME_LANE_W
+    return hp, wp
+
+
+def validate_frame_hw(name: str, h: int, w: int) -> None:
+    """Reject frame sizes the pixel-cascade tile table cannot host.
+
+    Raises ``ValueError`` with the padded tile sizes spelled out — the
+    same numbers that would otherwise appear (unexplained) in a Pallas
+    block-shape error at the first rendered tick."""
+    if h < MIN_FRAME_SIDE or w < MIN_FRAME_SIDE:
+        raise ValueError(
+            f"scenario {name!r}: frame_hw=({h}, {w}) is below the pixel "
+            f"cascade's minimum frame side of {MIN_FRAME_SIDE} px — the "
+            f"fused 3x3 stencil pipeline needs at least one "
+            f"{MIN_FRAME_SIDE}x{MIN_FRAME_SIDE} sprite's worth of pixels "
+            f"per frame")
+    hp, wp = frame_pad(h, w)
+    if hp * wp > MAX_FRAME_ELEMS:
+        raise ValueError(
+            f"scenario {name!r}: frame_hw=({h}, {w}) pads to "
+            f"({hp}, {wp}) = {hp * wp} pixels per camera frame, over the "
+            f"pixel-cascade tile table's limit of {MAX_FRAME_ELEMS} — "
+            f"this would surface as an opaque Pallas shape error at the "
+            f"first rendered tick; shrink the frame")
+
 
 def bucket(n: int, minimum: int = BUCKET_MIN) -> int:
     """Next power-of-two size >= n (jit-cache-stable padding bucket)."""

@@ -1,62 +1,108 @@
 """Pallas TPU kernels: 3x3 dilation / erosion (paper Eqs. 5-6).
 
 A 3x3 stencil needs a 1-pixel halo.  Pallas blocks cannot overlap, so the
-wrapper materializes overlapping row-bands (bh+2 rows each) with a strided
-gather and the kernel reduces nine in-register shifted slices per band —
-VREG shifts, no re-loads, exactly how a TPU stencil wants to run.
+staged launchers materialize overlapping row-bands (bh+2 rows each) with a
+strided gather and the kernel reduces nine in-register shifted slices per
+band — VREG shifts, no re-loads, exactly how a TPU stencil wants to run.
+
+The halo/pad plumbing lives in exactly two shared helpers so the staged
+kernels here and the fused pixel cascade (``kernels/pixel_cascade.py``)
+run ONE implementation of the stencil math:
+
+  * ``stencil3x3`` — the nine-shift in-register reduction over a row
+    window, with the column halo filled in-kernel (no host-side W pad).
+  * ``halo_bands`` — the host-side overlapping row-band gather, including
+    the pad-H-to-band-multiple fill that every 3x3 launch needs.
+
+``dilate3x3_pallas`` / ``erode3x3_pallas`` are thin op/fill bindings of
+the one ``_morph_pallas`` launcher; they own their padding end to end
+(callers pass raw (B, H, W) arrays — no pre-padding contract to re-derive
+per call site).
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.buckets import FRAME_BAND_H
 from repro.kernels.runtime import resolve_interpret
 
-BAND_H = 32        # output rows per band
+#: output rows per band — shared with the fused cascade's tile table
+BAND_H = FRAME_BAND_H
+
+_OPS = {"max": jnp.maximum, "min": jnp.minimum}
 
 
-def _morph_kernel(xb_ref, out_ref, *, op: str):
-    """xb_ref: (1,1,bh+2,W+2) padded band -> out_ref (1,1,bh,W)."""
-    x = xb_ref[0, 0]
-    bh = out_ref.shape[2]
-    W = out_ref.shape[3]
-    red = jnp.maximum if op == "max" else jnp.minimum
+def stencil3x3(win: jax.Array, *, op: str, fill: int,
+               out_h: int, out_w: int) -> jax.Array:
+    """Nine-shift 3x3 stencil reduce over a row window, in registers.
+
+    ``win`` is an (out_h + 2, out_w) window that already carries the
+    1-row halo above and below; the 1-column halo is filled here with
+    ``fill`` (a concatenate, not a host pad), so callers never pad W.
+    Returns the (out_h, out_w) reduced block.  Shared by the staged
+    morphology kernels and the fused pixel cascade — one stencil
+    implementation for every 3x3 in the repo.
+    """
+    red = _OPS[op]
+    fc = jnp.full((win.shape[0], 1), fill, win.dtype)
+    xp = jnp.concatenate([fc, win, fc], axis=1)       # (out_h+2, out_w+2)
     acc = None
     for dy in range(3):
         for dx in range(3):
-            sl = x[dy:dy + bh, dx:dx + W]
+            sl = xp[dy:dy + out_h, dx:dx + out_w]
             acc = sl if acc is None else red(acc, sl)
-    out_ref[0, 0] = acc.astype(out_ref.dtype)
+    return acc
+
+
+def halo_bands(x: jax.Array, *, fill: int,
+               band_h: int = BAND_H) -> Tuple[jax.Array, int]:
+    """Overlapping (band_h + 2)-row bands of a (B, H, W) array.
+
+    Pads H up to a band multiple and adds the 1-row stencil halo, both
+    with ``fill`` (so out-of-image neighbours reduce to the identity of
+    the stencil's op), then gathers the overlapping bands with strided
+    dynamic slices.  Returns ((B, nb, band_h + 2, W), original H).
+    """
+    B, H, W = x.shape
+    hp = -(-H // band_h) * band_h
+    xp = jnp.pad(x, ((0, 0), (1, 1 + hp - H), (0, 0)), constant_values=fill)
+    nb = hp // band_h
+    bands = jnp.stack(
+        [jax.lax.dynamic_slice_in_dim(xp, i * band_h, band_h + 2, axis=1)
+         for i in range(nb)], axis=1)
+    return bands, H
+
+
+def _morph_kernel(xb_ref, out_ref, *, op: str, fill: int):
+    """xb_ref: (1, 1, bh+2, W) haloed band -> out_ref (1, 1, bh, W)."""
+    bh, W = out_ref.shape[2], out_ref.shape[3]
+    out_ref[0, 0] = stencil3x3(xb_ref[0, 0], op=op, fill=fill,
+                               out_h=bh, out_w=W).astype(out_ref.dtype)
 
 
 def _morph_pallas(x: jax.Array, *, op: str, fill: int,
                   interpret: Optional[bool] = None) -> jax.Array:
-    """(B, H, W) int32 -> (B, H, W); 3x3 max/min with `fill` padding."""
+    """(B, H, W) int32 -> (B, H, W); 3x3 max/min with ``fill`` padding."""
     interpret = resolve_interpret(interpret)
-    B, H, W = x.shape
-    assert H % BAND_H == 0, (H, BAND_H)
-    nb = H // BAND_H
-    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1)), constant_values=fill)
-    # overlapping bands: (B, nb, BAND_H+2, W+2)
-    bands = jnp.stack(
-        [jax.lax.dynamic_slice_in_dim(xp, i * BAND_H, BAND_H + 2, axis=1)
-         for i in range(nb)], axis=1)
-    grid = (B, nb)
-    kernel = functools.partial(_morph_kernel, op=op)
+    B, _, W = x.shape
+    bands, H = halo_bands(x, fill=fill)
+    nb = bands.shape[1]
+    kernel = functools.partial(_morph_kernel, op=op, fill=fill)
     out = pl.pallas_call(
         kernel,
-        grid=grid,
-        in_specs=[pl.BlockSpec((1, 1, BAND_H + 2, W + 2),
+        grid=(B, nb),
+        in_specs=[pl.BlockSpec((1, 1, BAND_H + 2, W),
                                lambda b, i: (b, i, 0, 0))],
         out_specs=pl.BlockSpec((1, 1, BAND_H, W), lambda b, i: (b, i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((B, nb, BAND_H, W), x.dtype),
         interpret=interpret,
-    )(bands[:, :, None].reshape(B, nb, BAND_H + 2, W + 2))
-    return out.reshape(B, H, W)
+    )(bands)
+    return out.reshape(B, nb * BAND_H, W)[:, :H]
 
 
 def dilate3x3_pallas(x: jax.Array, interpret: Optional[bool] = None) -> jax.Array:

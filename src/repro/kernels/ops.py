@@ -21,6 +21,7 @@ from repro.kernels import calibrate as _ca
 from repro.kernels import flash_attention as _fa
 from repro.kernels import framediff as _fd
 from repro.kernels import morphology as _mo
+from repro.kernels import pixel_cascade as _pc
 from repro.kernels import triage as _tr
 from repro.kernels import ref as _ref
 from repro.kernels.runtime import interpret_default  # noqa: F401  (re-export)
@@ -57,8 +58,7 @@ def dilate3x3(x: jax.Array, use_pallas: bool = True) -> jax.Array:
     x = x.astype(jnp.int32)
     if not use_pallas:
         return _ref.dilate3x3_ref(x)
-    xp, H, W = _pad_hw(x, _mo.BAND_H, 1)
-    return _mo.dilate3x3_pallas(xp)[:, :H, :W]
+    return _mo.dilate3x3_pallas(x)
 
 
 @functools.partial(jax.jit, static_argnames=("maxval", "use_pallas"))
@@ -66,8 +66,44 @@ def erode3x3(x: jax.Array, maxval: int = 255, use_pallas: bool = True) -> jax.Ar
     x = x.astype(jnp.int32)
     if not use_pallas:
         return _ref.erode3x3_ref(x, maxval)
-    xp, H, W = _pad_hw(x, _mo.BAND_H, 1, value=maxval)
-    return _mo.erode3x3_pallas(xp, maxval=maxval)[:, :H, :W]
+    return _mo.erode3x3_pallas(x, maxval=maxval)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("threshold", "maxval", "use_pallas",
+                                    "fused"))
+def pixel_cascade(f0: jax.Array, f1: jax.Array, f2: jax.Array, *,
+                  threshold: int = 40, maxval: int = 255,
+                  use_pallas: bool = True, fused: bool = True):
+    """Whole pixel frontend — framediff → dilate → erode → count — in ONE
+    Pallas launch per tick.
+
+    Frames are (B, H, W, 3) uint8/int; returns ``(mask (B, H, W) int32,
+    counts (B,) int32)`` where ``counts[b]`` is camera b's foreground pixel
+    count — the reduction ``detect`` uses to skip connected-component
+    labeling for motionless cameras without a second pass over the mask.
+
+    ``fused=False`` (or ``use_pallas=False``) runs the staged chain — the
+    original three separate launches (or the jnp reference twin) plus a
+    mask reduction — retained as the differential reference the fused
+    kernel is tested bit-exact against.  Frames are zero-padded to the
+    (FRAME_BAND_H, FRAME_LANE_W) tile from ``kernels/buckets.py`` before
+    the fused launch; the pad is sliced back off and never reaches counts.
+    """
+    f0, f1, f2 = (x.astype(jnp.int32) for x in (f0, f1, f2))
+    if use_pallas and fused:
+        H, W = f0.shape[1], f0.shape[2]
+        f0p, f1p, f2p = (_pc.pad_frames(x) for x in (f0, f1, f2))
+        mask, band_counts = _pc._cascade_call(
+            f0p, f1p, f2p, threshold=threshold, maxval=maxval,
+            true_hw=(H, W))
+        return mask[:, :H, :W], band_counts.sum(axis=1)
+    if not use_pallas:
+        mask = _ref.pixel_cascade_ref(f0, f1, f2, threshold, maxval)
+    else:
+        mask = erode3x3(dilate3x3(framediff(
+            f0, f1, f2, threshold=threshold, maxval=maxval)), maxval=maxval)
+    return mask, jnp.sum(mask > 0, axis=(1, 2)).astype(jnp.int32)
 
 
 @functools.partial(jax.jit,

@@ -55,6 +55,59 @@ def erode3x3_ref(x: jax.Array, maxval: int = 255) -> jax.Array:
     return out
 
 
+def pixel_cascade_ref(f0: jax.Array, f1: jax.Array, f2: jax.Array,
+                      threshold: int, maxval: int = 255) -> jax.Array:
+    """Jnp twin of the fused cascade: Eqs. 1-6 composed, (B,H,W) mask.
+
+    The morphology runs as ``lax.reduce_window`` (bit-exact for integer
+    max/min: window init 0 == dilate's fill since the mask is >= 0, init
+    ``maxval`` == erode's fill since the mask is <= maxval) — this is the
+    XLA-compiled fused twin the benchmarks time where compiled Pallas is
+    unavailable, so it should be the *fast* honest composition, not the
+    shift-and-mask teaching oracle above.
+    """
+    m = framediff_ref(f0, f1, f2, threshold, maxval)
+    win, strides = (1, 3, 3), (1, 1, 1)
+    pad = ((0, 0), (1, 1), (1, 1))
+    m = jax.lax.reduce_window(m, jnp.asarray(0, m.dtype),
+                              jax.lax.max, win, strides, pad)
+    return jax.lax.reduce_window(m, jnp.asarray(maxval, m.dtype),
+                                 jax.lax.min, win, strides, pad)
+
+
+def pixel_cascade_np(f0: np.ndarray, f1: np.ndarray, f2: np.ndarray,
+                     threshold: int, maxval: int = 255
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """Independent NumPy oracle for the fused pixel cascade.
+
+    Deliberately NOT a composition of the jnp twins: explicit np.pad
+    halos and nine-slice loops, so the parity test checks the boundary
+    semantics, not a shared implementation.  Returns (mask (B, H, W)
+    int32, counts (B,) int32 foreground pixels per camera).
+    """
+    f0, f1, f2 = (np.asarray(f, np.int64) for f in (f0, f1, f2))
+    d1 = np.abs(f1 - f0)
+    d2 = np.abs(f2 - f1)
+    da = np.bitwise_and(d1, d2)
+    gray = (da[..., 0] * 299 + da[..., 1] * 587 + da[..., 2] * 114) // 1000
+    m = np.where(gray > threshold, maxval, 0)
+    B, H, W = m.shape
+
+    def morph(x, red, fill):
+        xp = np.pad(x, ((0, 0), (1, 1), (1, 1)), constant_values=fill)
+        acc = None
+        for dy in range(3):
+            for dx in range(3):
+                sl = xp[:, dy:dy + H, dx:dx + W]
+                acc = sl if acc is None else red(acc, sl)
+        return acc
+
+    m = morph(m, np.maximum, 0)
+    m = morph(m, np.minimum, maxval)
+    mask = m.astype(np.int32)
+    return mask, (mask > 0).sum(axis=(1, 2)).astype(np.int32)
+
+
 def mha_ref(q: jax.Array, k: jax.Array, v: jax.Array,
             causal: bool = True) -> jax.Array:
     """Unfused GQA attention oracle.  q (B,H,Sq,hd), k/v (B,KV,Sk,hd)."""

@@ -17,6 +17,7 @@ not-yet-traced shapes).
 """
 from __future__ import annotations
 
+import functools
 import os
 from typing import Optional
 
@@ -31,3 +32,32 @@ def interpret_default() -> bool:
 def resolve_interpret(interpret: Optional[bool]) -> bool:
     """An explicit per-call ``interpret=`` wins; ``None`` means the knob."""
     return interpret_default() if interpret is None else bool(interpret)
+
+
+@functools.lru_cache(maxsize=1)
+def compiled_available() -> bool:
+    """Whether this backend can lower a Pallas kernel with interpret=False.
+
+    Probed once per process with a tiny single-block copy kernel.  On the
+    CPU backend of current jax this raises ``Only interpret mode is
+    supported on CPU backend`` — the compiled-mode tests and BENCH rows
+    use this probe to skip (tests) or record their actual substrate
+    (benchmarks) instead of misrepresenting interpreted numbers as
+    compiled ones.  On a TPU runtime it returns True and
+    ``REPRO_PALLAS_INTERPRET=0`` exercises the real compiled path.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    def _copy(x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+
+    try:
+        x = jnp.zeros((8, 128), jnp.float32)
+        pl.pallas_call(
+            _copy, out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+            interpret=False)(x)
+        return True
+    except Exception:
+        return False

@@ -213,6 +213,70 @@ def analyze(cfg: ModelConfig, shape: InputShape, *, chips: int = 256,
     )
 
 
+# --- pixel-cascade kernels ------------------------------------------------------------
+
+#: int32 element size of the pixel kernels' frames and masks
+PIXEL_BYTES = 4
+
+#: approximate integer ops per pixel for each pixel-cascade stage:
+#: framediff = 3ch x (2 sub/abs + and) + 3 mul + 2 add + 1 div + 1 cmp/select;
+#: each 3x3 morphology stage = 8 max/min reductions
+PIXEL_FLOPS = {"framediff": 16.0, "dilate": 8.0, "erode": 8.0}
+
+
+@dataclasses.dataclass
+class PixelRoofline:
+    """Analytic bytes/FLOPs roofline for one pixel-frontend variant.
+
+    ``roofline_fraction`` is the fraction of peak compute the kernel's
+    arithmetic intensity admits on the reference TPU roofline
+    (min(1, AI / ridge), ridge = peak FLOP/s over HBM B/s) — below 1.0
+    the kernel is bandwidth-bound and bytes, not launches, are the cost.
+    """
+    name: str
+    hbm_bytes: float
+    flops: float
+
+    @property
+    def ai(self) -> float:
+        return self.flops / max(self.hbm_bytes, 1.0)
+
+    @property
+    def ridge(self) -> float:
+        return PEAK_FLOPS_BF16 / HBM_BW
+
+    @property
+    def roofline_fraction(self) -> float:
+        return min(1.0, self.ai / self.ridge)
+
+    def to_row(self) -> Dict[str, float]:
+        return {"hbm_bytes": self.hbm_bytes, "flops": self.flops,
+                "ai_flops_per_byte": round(self.ai, 4),
+                "roofline_fraction": round(self.roofline_fraction, 6)}
+
+
+def pixel_cascade_roofline(batch: int, h: int, w: int, *, fused: bool
+                           ) -> PixelRoofline:
+    """Analytic HBM traffic + ops of one tick's pixel frontend.
+
+    Both variants read the three (B, H, W, 3) int32 frames and write the
+    final (B, H, W) mask.  The staged chain additionally round-trips the
+    framediff and dilated masks through HBM — two extra full-frame writes
+    and two extra reads — which is exactly the traffic the fused kernel's
+    VMEM-resident band pipeline deletes.  FLOPs are identical by
+    construction (same stencil math, one implementation).
+    """
+    px = batch * h * w
+    frames = 3 * px * 3 * PIXEL_BYTES          # three RGB int32 frames in
+    mask = px * PIXEL_BYTES                    # final mask out
+    flops = px * sum(PIXEL_FLOPS.values())
+    if fused:
+        return PixelRoofline("pixel_cascade_fused", frames + mask, flops)
+    # staged: framediff out + dilate in/out + erode in (4 extra passes)
+    return PixelRoofline("pixel_cascade_staged",
+                         frames + mask + 4 * mask, flops)
+
+
 def load_dryrun(out_dir: str, arch: str, shape: str, mesh: str
                 ) -> Optional[Dict[str, Any]]:
     path = os.path.join(out_dir, f"{arch}__{shape}__{mesh}.json")

@@ -8,9 +8,13 @@ module runs that path over the procedural camera fleet:
   1. render — every camera produces one synthetic frame triple per
      scheduler tick (``scenario.frame_schedule`` staggers captures within
      the tick), batched fleet-wide into one (C, 3, H, W, 3) array.
-  2. framediff — the Pallas framediff + dilate/erode cascade and the
-     connected-component labeler (``repro.detection.pipeline.detect``)
-     turn the tick's frames into filtered moving-object crops.
+  2. framediff — the FUSED pixel cascade (ONE Pallas launch per tick:
+     framediff + dilate + erode + foreground count, see
+     ``kernels/pixel_cascade.py``) and the connected-component labeler
+     (``repro.detection.pipeline.detect``) turn the tick's frames into
+     filtered moving-object crops; the counts skip CCL on motionless
+     ticks.  ``fused=False`` keeps the original staged three-launch
+     chain as the differential reference.
   3. classify — all of the tick's crops, across every camera, are scored
      by the CQ classifier in ONE bucket-padded jit launch
      (``kernels.ops.score_crops``) — launches per tick stay O(1) in fleet
@@ -90,7 +94,8 @@ class PixelFrontend(Frontend):
                  params=None, seed: int = 0,
                  query_class: int = SV.QUERY_CLASS,
                  threshold: int = 40, crop: int = 32, min_area: int = 12,
-                 use_pallas: bool = True, cache: bool = True):
+                 use_pallas: bool = True, fused: bool = True,
+                 cache: bool = True):
         super().__init__()
         assert crop % 8 == 0, "crop side must be patch-aligned (8 px)"
         full = get_config(arch)
@@ -104,6 +109,7 @@ class PixelFrontend(Frontend):
         self.crop = crop
         self.min_area = min_area
         self.use_pallas = use_pallas
+        self.fused = fused           # ONE fused pixel launch vs staged three
         self.launches = 0            # classifier launches (one per tick)
         self._conf_fn = jax.jit(functools.partial(_conf_apply, self.cfg))
         self._cache_enabled = cache
@@ -149,7 +155,7 @@ class PixelFrontend(Frontend):
             t0 = time.perf_counter()
             dets = DP.detect(batch, threshold=self.threshold, crop=self.crop,
                              min_area=self.min_area,
-                             use_pallas=self.use_pallas)
+                             use_pallas=self.use_pallas, fused=self.fused)
             t_framediff += time.perf_counter() - t0
 
             flat = [(j, d) for j, per in enumerate(dets) for d in per]

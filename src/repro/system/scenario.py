@@ -20,7 +20,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.data import synthetic_video as SV
-from repro.kernels.buckets import validate_fleet_dims
+from repro.kernels.buckets import validate_fleet_dims, validate_frame_hw
 from repro.serving.simulator import Item
 from repro.system.queries import QuerySpec
 
@@ -172,6 +172,11 @@ class Scenario:
         # an oversized fold surfaces as an opaque Pallas shape error
         validate_fleet_dims(self.name, len(self.query_ids), self.num_edges,
                             self.escalation_capacity)
+        # frame sizes checked against the pixel-cascade tile table for the
+        # same reason: a bad frame_hw must raise here, not as a Pallas
+        # block-shape error at the first rendered tick
+        if self.frame_hw is not None:
+            validate_frame_hw(self.name, *self.frame_hw)
         if self.superstep is not None and self.superstep < 1:
             raise ValueError(
                 f"scenario {self.name!r}: superstep={self.superstep} must "

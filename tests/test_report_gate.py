@@ -126,3 +126,102 @@ def test_gate_end_to_end_perturbation(tmp_path):
     breaches = gate(str(fresh_dir), str(base_dir))
     assert len(breaches) == 1
     assert "accuracy_F2" in breaches[0]
+
+
+# --- kernel-bench gate (BENCH_pixel_cascade.json) ----------------------------
+
+from report_gate import bench_gate  # noqa: E402
+
+
+def _bench_doc():
+    return {
+        "pallas_compiled_available": False,
+        "interpret_knob": True,
+        "shapes": {
+            "B4_96x128": {
+                "rows": {
+                    "staged_interpret": {"us_per_call": 2000.0,
+                                         "Mpx_s": 24.0,
+                                         "substrate": "pallas_interpret",
+                                         "pallas_launches": 3},
+                    "fused_compiled": {"us_per_call": 500.0, "Mpx_s": 98.0,
+                                       "substrate": "xla_ref",
+                                       "pallas_launches": 0},
+                },
+            },
+        },
+    }
+
+
+def _bench_pair(tmp_path, base, fresh):
+    bp = tmp_path / "base.json"
+    fp = tmp_path / "fresh.json"
+    bp.write_text(json.dumps(base))
+    fp.write_text(json.dumps(fresh))
+    return str(fp), str(bp)
+
+
+def test_bench_identical_passes(tmp_path):
+    assert bench_gate(*_bench_pair(tmp_path, _bench_doc(), _bench_doc())) == []
+
+
+def test_bench_throughput_regression_breaches(tmp_path):
+    """The acceptance band: >30% slower must breach."""
+    fresh = copy.deepcopy(_bench_doc())
+    fresh["shapes"]["B4_96x128"]["rows"]["fused_compiled"]["Mpx_s"] = 60.0
+    breaches = bench_gate(*_bench_pair(tmp_path, _bench_doc(), fresh))
+    assert len(breaches) == 1 and "throughput" in breaches[0]
+
+
+def test_bench_gate_is_one_sided(tmp_path):
+    """Getting faster (even 10x) never breaches — regressions only."""
+    fresh = copy.deepcopy(_bench_doc())
+    fresh["shapes"]["B4_96x128"]["rows"]["fused_compiled"]["Mpx_s"] = 980.0
+    assert bench_gate(*_bench_pair(tmp_path, _bench_doc(), fresh)) == []
+
+
+def test_bench_small_slowdown_within_band_passes(tmp_path):
+    fresh = copy.deepcopy(_bench_doc())
+    fresh["shapes"]["B4_96x128"]["rows"]["fused_compiled"]["Mpx_s"] = 70.0
+    assert bench_gate(*_bench_pair(tmp_path, _bench_doc(), fresh)) == []
+
+
+def test_bench_substrate_flip_breaches(tmp_path):
+    """Interpret baseline vs newly-compiled fresh run must be re-blessed,
+    not silently absorbed by the band."""
+    fresh = copy.deepcopy(_bench_doc())
+    row = fresh["shapes"]["B4_96x128"]["rows"]["fused_compiled"]
+    row["substrate"] = "pallas_compiled"
+    row["Mpx_s"] = 500.0
+    breaches = bench_gate(*_bench_pair(tmp_path, _bench_doc(), fresh))
+    assert len(breaches) == 1 and "substrate" in breaches[0]
+
+
+def test_bench_missing_shape_and_row_breach(tmp_path):
+    fresh = copy.deepcopy(_bench_doc())
+    del fresh["shapes"]["B4_96x128"]["rows"]["fused_compiled"]
+    base = copy.deepcopy(_bench_doc())
+    base["shapes"]["B8_64x64"] = {"rows": {}}
+    breaches = bench_gate(*_bench_pair(tmp_path, base, fresh))
+    assert any("missing from fresh" in b for b in breaches)
+    assert any("B8_64x64" in b for b in breaches)
+
+
+def test_bench_gate_on_committed_baseline():
+    """The committed BENCH_pixel_cascade.json gates cleanly against
+    itself and satisfies the acceptance bar: every shape's fused
+    compiled throughput >= 2x its staged interpret baseline."""
+    path = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "BENCH_pixel_cascade.json")
+    assert bench_gate(path, path) == []
+    with open(path) as fh:
+        doc = json.load(fh)
+    assert doc["shapes"], "committed bench must not be empty"
+    for key, shape in doc["shapes"].items():
+        rows = shape["rows"]
+        assert rows["fused_interpret"]["pallas_launches"] == 1
+        assert rows["staged_interpret"]["pallas_launches"] == 3
+        ratio = (rows["fused_compiled"]["Mpx_s"]
+                 / rows["staged_interpret"]["Mpx_s"])
+        assert ratio >= 2.0, (key, ratio)
+        assert "roofline_fraction" in shape["roofline"]["fused"]
