@@ -67,12 +67,19 @@ bench-smoke:     ## fast end-to-end sanity; regenerates per-scenario JSON baseli
 	$(PY) examples/run_scenarios.py --scenario all --cameras 4 --duration 30 --json-out reports
 	$(PY) examples/quickstart.py
 
+# Inside GitHub Actions the gates also append a per-metric verdict table
+# to the job summary page; local runs (no GITHUB_STEP_SUMMARY) skip it.
+SUMMARY_FLAG = $(if $(GITHUB_STEP_SUMMARY),--summary-md "$(GITHUB_STEP_SUMMARY)")
+
 REPORT_FRESH := .cache/reports-fresh
 report-gate:     ## regenerate all scenario reports into a scratch dir and diff against committed reports/ baselines (tolerance bands; fails on breach)
 	rm -rf $(REPORT_FRESH)
 	$(PY) examples/run_scenarios.py --scenario all --cameras 4 --duration 30 --json-out $(REPORT_FRESH)
-	$(PY) benchmarks/report_gate.py --fresh $(REPORT_FRESH) --baseline reports
+	$(PY) benchmarks/report_gate.py --fresh $(REPORT_FRESH) --baseline reports $(SUMMARY_FLAG)
 
+# BENCH_GATE_FLAGS: extra report_gate.py flags — the PR-time CI job passes
+# `--bench-substrate pallas_interpret` so only interpret rows gate on the
+# CPU runner (compiled rows remain nightly/TPU business).
 BENCH_FRESH := .cache/bench-fresh
 bench-gate:      ## regenerate BENCH_pixel_cascade.json into a scratch dir and diff vs the committed baseline (one-sided >30% throughput regression fails)
 	rm -rf $(BENCH_FRESH) && mkdir -p $(BENCH_FRESH)
@@ -80,7 +87,8 @@ bench-gate:      ## regenerate BENCH_pixel_cascade.json into a scratch dir and d
 	  pixel_cascade_bench(out_path='$(BENCH_FRESH)/BENCH_pixel_cascade.json')"
 	$(PY) benchmarks/report_gate.py \
 	  --bench-fresh $(BENCH_FRESH)/BENCH_pixel_cascade.json \
-	  --bench-baseline benchmarks/BENCH_pixel_cascade.json
+	  --bench-baseline benchmarks/BENCH_pixel_cascade.json \
+	  $(BENCH_GATE_FLAGS) $(SUMMARY_FLAG)
 
 bench:           ## full paper tables/figures (fine-tunes the workload; slow)
 	$(PY) -m benchmarks.run

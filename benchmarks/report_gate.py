@@ -34,22 +34,37 @@ committed baseline and fails on a >30% ONE-SIDED throughput regression
 wall-clock microbenchmarks are noisy upward, regressions are the signal).
 A fresh file whose substrate differs from the baseline's (e.g. compiled
 Pallas became available) is reported as a structural breach so the
-baseline gets re-blessed deliberately.
+baseline gets re-blessed deliberately.  ``--bench-substrate SUB``
+(repeatable) restricts the bench gate to rows whose baseline substrate
+matches — the PR-time CPU job gates ``pallas_interpret`` rows and leaves
+the compiled rows to nightly/TPU.
+
+Fresh scheme rows additionally pass physical-consistency checks with no
+baseline involved (``row_consistency``): fused recalibration launches
+with zero downlink bytes, or quantized downlink bytes exceeding the
+row's own fp-equivalent reference, fail the gate outright.
+
+``--summary-md PATH`` appends a per-metric verdict table (value,
+baseline, tolerance, pass/fail) to PATH; CI points it at
+``$GITHUB_STEP_SUMMARY`` so deltas land on the job page.
 
   PYTHONPATH=src python benchmarks/report_gate.py --fresh .cache/reports-fresh
   PYTHONPATH=src python benchmarks/report_gate.py --fresh DIR --baseline reports
   PYTHONPATH=src python benchmarks/report_gate.py \
       --bench-fresh .cache/BENCH_pixel_cascade.json \
-      --bench-baseline benchmarks/BENCH_pixel_cascade.json
+      --bench-baseline benchmarks/BENCH_pixel_cascade.json \
+      --bench-substrate pallas_interpret \
+      --summary-md "$GITHUB_STEP_SUMMARY"
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import glob
 import json
 import os
 import sys
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 # metric -> (kind, band, absolute floor for relative bands)
 TOLERANCES: Dict[str, Tuple[str, float, float]] = {
@@ -59,11 +74,45 @@ TOLERANCES: Dict[str, Tuple[str, float, float]] = {
     "bandwidth_MB": ("rel", 0.25, 0.05),
     "lan_MB": ("rel", 0.25, 0.05),
     "downloaded_MB": ("rel", 0.25, 0.05),
+    # bandwidth-endgame columns: the fp-equivalent downlink reference,
+    # upload spent per useful answer, and the speculative-escalation pair
+    # (flip rate is an absolute band — its baseline is near zero, so a
+    # relative band would either always pass or always fail)
+    "downlink_fp_MB": ("rel", 0.25, 0.05),
+    "uplink_bytes_per_TP": ("rel", 0.25, 256.0),
+    "reconciliation_flip_rate": ("abs", 0.05, 0.0),
+    "provisional_latency_s": ("rel", 0.25, 0.05),
 }
 PER_QUERY_TOLERANCES: Dict[str, Tuple[str, float, float]] = {
     "f2": ("abs", 0.05, 0.0),
     "avg_latency_s": ("rel", 0.25, 0.10),
 }
+
+
+@dataclasses.dataclass
+class Check:
+    """One verdict row for the ``--summary-md`` table: every compared
+    metric (pass or fail) plus every structural/consistency breach."""
+    tag: str                       # e.g. "drifting_city/surveiledge"
+    metric: str
+    fresh: object                  # value, or None when missing
+    base: object
+    tol: str                       # human-readable band, e.g. "±25% rel"
+    ok: bool
+    note: str = ""
+
+
+def _tol_str(spec: Tuple[str, float, float]) -> str:
+    kind, band, floor = spec
+    if kind == "abs":
+        return f"±{band} abs"
+    return f"±{band:.0%} rel (floor {floor})"
+
+
+def _note(checks: Optional[List[Check]], tag: str, metric: str,
+          fresh, base, tol: str, ok: bool, note: str = "") -> None:
+    if checks is not None:
+        checks.append(Check(tag, metric, fresh, base, tol, ok, note))
 
 
 def _check(metric: str, base: float, fresh: float,
@@ -82,8 +131,9 @@ def _check(metric: str, base: float, fresh: float,
 
 
 def compare_rows(base: dict, fresh: dict,
-                 tolerances: Dict[str, Tuple[str, float, float]]
-                 ) -> List[str]:
+                 tolerances: Dict[str, Tuple[str, float, float]],
+                 checks: Optional[List[Check]] = None,
+                 tag: str = "") -> List[str]:
     """Diff one scheme (or per-query) row; missing metrics are breaches."""
     out = []
     for metric, spec in tolerances.items():
@@ -91,14 +141,49 @@ def compare_rows(base: dict, fresh: dict,
             continue                  # older baseline without the column
         if metric not in fresh:
             out.append(f"{metric}: missing from fresh report")
+            _note(checks, tag, metric, None, base[metric], _tol_str(spec),
+                  False, "missing from fresh report")
             continue
         msg = _check(metric, float(base[metric]), float(fresh[metric]), spec)
+        _note(checks, tag, metric, fresh[metric], base[metric],
+              _tol_str(spec), not msg, msg)
         if msg:
             out.append(msg)
     return out
 
 
-def compare_report(baseline: dict, fresh: dict) -> List[str]:
+def row_consistency(tag: str, row: dict,
+                    checks: Optional[List[Check]] = None) -> List[str]:
+    """Physical-impossibility checks on ONE fresh scheme row.
+
+    These hold regardless of any baseline: a run claiming fused
+    recalibration launches must have shipped downlink bytes, and the
+    charged (possibly quantized) downlink bytes can never exceed the
+    row's own fp-equivalent reference — quantized shipping costing MORE
+    than full-width fp is a wire-accounting bug, not drift to absorb."""
+    out = []
+    down = row.get("downloaded_bytes")
+    if down is None:                  # older artifact: MB-only columns
+        down = row.get("downloaded_MB", 0.0)
+    if row.get("model_updates", 0) > 0 and down == 0:
+        msg = (f"model_updates={row['model_updates']} but zero downlink "
+               f"bytes — updates that never crossed the downlink")
+        out.append(msg)
+        _note(checks, tag, "downloaded_bytes", down,
+              row.get("model_updates"), "> 0 when updates > 0", False, msg)
+    fp_down = row.get("downlink_fp_bytes")
+    if fp_down is not None and down > fp_down:
+        msg = (f"downloaded_bytes={down} exceeds fp-equivalent reference "
+               f"downlink_fp_bytes={fp_down} — quantized shipping cannot "
+               f"cost more than full-width fp")
+        out.append(msg)
+        _note(checks, tag, "downloaded_bytes", down, fp_down,
+              "<= downlink_fp_bytes", False, msg)
+    return out
+
+
+def compare_report(baseline: dict, fresh: dict,
+                   checks: Optional[List[Check]] = None) -> List[str]:
     """All breaches between one scenario's baseline and fresh report."""
     breaches: List[str] = []
     name = baseline.get("scenario", "?")
@@ -108,30 +193,42 @@ def compare_report(baseline: dict, fresh: dict) -> List[str]:
         tag = f"{name}/{scheme}"
         if scheme not in f_schemes:
             breaches.append(f"{tag}: scheme missing from fresh report")
+            _note(checks, tag, "(scheme)", None, "present", "structure",
+                  False, "scheme missing from fresh report")
             continue
         if scheme not in b_schemes:
             breaches.append(f"{tag}: scheme has no committed baseline "
                             f"(regenerate reports/ and commit)")
+            _note(checks, tag, "(scheme)", "present", None, "structure",
+                  False, "scheme has no committed baseline")
             continue
         b_row, f_row = b_schemes[scheme], f_schemes[scheme]
+        breaches.extend(f"{tag}: {m}" for m in
+                        compare_rows(b_row, f_row, TOLERANCES, checks, tag))
         breaches.extend(f"{tag}: {m}"
-                        for m in compare_rows(b_row, f_row, TOLERANCES))
+                        for m in row_consistency(tag, f_row, checks))
         b_q = b_row.get("queries", {})
         f_q = f_row.get("queries", {})
         for q in sorted(set(b_q) | set(f_q)):
             qtag = f"{tag}/q{q}"
             if q not in f_q:
                 breaches.append(f"{qtag}: query missing from fresh report")
+                _note(checks, qtag, "(query)", None, "present", "structure",
+                      False, "query missing from fresh report")
             elif q not in b_q:
                 breaches.append(f"{qtag}: query has no committed baseline")
+                _note(checks, qtag, "(query)", "present", None, "structure",
+                      False, "query has no committed baseline")
             else:
                 breaches.extend(
                     f"{qtag}: {m}" for m in
-                    compare_rows(b_q[q], f_q[q], PER_QUERY_TOLERANCES))
+                    compare_rows(b_q[q], f_q[q], PER_QUERY_TOLERANCES,
+                                 checks, qtag))
     return breaches
 
 
-def gate(fresh_dir: str, baseline_dir: str) -> List[str]:
+def gate(fresh_dir: str, baseline_dir: str,
+         checks: Optional[List[Check]] = None) -> List[str]:
     """Diff every ``*.json`` pairwise by filename; structural gaps breach."""
     base_files = {os.path.basename(p)
                   for p in glob.glob(os.path.join(baseline_dir, "*.json"))}
@@ -141,16 +238,20 @@ def gate(fresh_dir: str, baseline_dir: str) -> List[str]:
     for fn in sorted(base_files - fresh_files):
         breaches.append(f"{fn}: committed baseline has no fresh run "
                         f"(scenario dropped? delete the stale baseline)")
+        _note(checks, fn, "(report)", None, "present", "structure", False,
+              "committed baseline has no fresh run")
     for fn in sorted(fresh_files - base_files):
         breaches.append(f"{fn}: fresh report has no committed baseline "
                         f"(new scenario? run `make bench-smoke` and commit "
                         f"reports/{fn})")
+        _note(checks, fn, "(report)", "present", None, "structure", False,
+              "fresh report has no committed baseline")
     for fn in sorted(base_files & fresh_files):
         with open(os.path.join(baseline_dir, fn)) as fh:
             base = json.load(fh)
         with open(os.path.join(fresh_dir, fn)) as fh:
             fresh = json.load(fh)
-        breaches.extend(compare_report(base, fresh))
+        breaches.extend(compare_report(base, fresh, checks))
     return breaches
 
 
@@ -159,7 +260,9 @@ def gate(fresh_dir: str, baseline_dir: str) -> List[str]:
 BENCH_REGRESSION_BAND = 0.30
 
 
-def bench_gate(fresh_path: str, baseline_path: str) -> List[str]:
+def bench_gate(fresh_path: str, baseline_path: str,
+               substrates: Optional[List[str]] = None,
+               checks: Optional[List[Check]] = None) -> List[str]:
     """Diff a fresh BENCH_pixel_cascade.json against the committed one.
 
     One-sided: only throughput (``Mpx_s``) drops beyond
@@ -167,6 +270,10 @@ def bench_gate(fresh_path: str, baseline_path: str) -> List[str]:
     recorded substrate must match — a substrate flip (interpret baseline
     vs newly available compiled Pallas) is a deliberate re-bless, not
     noise to absorb.
+
+    ``substrates`` restricts the gate to rows whose BASELINE substrate is
+    in the list (e.g. ``["pallas_interpret"]`` on a PR-time CPU runner:
+    interpret rows gate, compiled/TPU rows stay nightly's business).
     """
     with open(baseline_path) as fh:
         base = json.load(fh)
@@ -178,37 +285,92 @@ def bench_gate(fresh_path: str, baseline_path: str) -> List[str]:
     for key in sorted(set(b_shapes) | set(f_shapes)):
         if key not in f_shapes:
             breaches.append(f"{key}: shape missing from fresh bench")
+            _note(checks, key, "(shape)", None, "present", "structure",
+                  False, "shape missing from fresh bench")
             continue
         if key not in b_shapes:
             breaches.append(f"{key}: shape has no committed baseline "
                             f"(regenerate BENCH_pixel_cascade.json and "
                             f"commit)")
+            _note(checks, key, "(shape)", "present", None, "structure",
+                  False, "shape has no committed baseline")
             continue
         b_rows = b_shapes[key].get("rows", {})
         f_rows = f_shapes[key].get("rows", {})
         for row in sorted(set(b_rows) | set(f_rows)):
             tag = f"{key}/{row}"
+            b_sub = b_rows[row].get("substrate") if row in b_rows else None
+            if substrates is not None and row in b_rows \
+                    and b_sub not in substrates:
+                continue              # this substrate gates elsewhere
             if row not in f_rows:
                 breaches.append(f"{tag}: row missing from fresh bench")
+                _note(checks, tag, "(row)", None, "present", "structure",
+                      False, "row missing from fresh bench")
                 continue
             if row not in b_rows:
+                if substrates is not None \
+                        and f_rows[row].get("substrate") not in substrates:
+                    continue
                 breaches.append(f"{tag}: row has no committed baseline")
+                _note(checks, tag, "(row)", "present", None, "structure",
+                      False, "row has no committed baseline")
                 continue
-            b_sub = b_rows[row].get("substrate")
             f_sub = f_rows[row].get("substrate")
             if b_sub != f_sub:
-                breaches.append(
-                    f"{tag}: substrate changed {b_sub} -> {f_sub} "
-                    f"(re-bless the baseline deliberately)")
+                msg = (f"substrate changed {b_sub} -> {f_sub} "
+                       f"(re-bless the baseline deliberately)")
+                breaches.append(f"{tag}: {msg}")
+                _note(checks, tag, "substrate", f_sub, b_sub, "exact",
+                      False, msg)
                 continue
             b_tp = float(b_rows[row]["Mpx_s"])
             f_tp = float(f_rows[row]["Mpx_s"])
-            if f_tp < b_tp * (1.0 - BENCH_REGRESSION_BAND):
+            slow = f_tp < b_tp * (1.0 - BENCH_REGRESSION_BAND)
+            _note(checks, tag, "Mpx_s", f_tp, b_tp,
+                  f"-{BENCH_REGRESSION_BAND:.0%} one-sided", not slow)
+            if slow:
                 breaches.append(
                     f"{tag}: throughput {f_tp} Mpx/s is more than "
                     f"{BENCH_REGRESSION_BAND:.0%} below baseline "
                     f"{b_tp} Mpx/s")
     return breaches
+
+
+def write_summary_md(path: str, checks: List[Check]) -> None:
+    """Append a per-metric verdict table (GitHub-flavored markdown) to
+    ``path`` — in CI that is ``$GITHUB_STEP_SUMMARY``, so the deltas land
+    on the job page instead of inside an uploaded JSON artifact.
+    Failures render first; passing rows fold into a ``<details>``."""
+    def fmt(v) -> str:
+        if v is None:
+            return "—"
+        if isinstance(v, float):
+            return f"{v:.4g}"
+        return str(v)
+
+    def table(rows: List[Check]) -> List[str]:
+        out = ["| artifact | metric | fresh | baseline | tolerance | "
+               "verdict |", "|---|---|---|---|---|---|"]
+        for c in rows:
+            verdict = "✅ pass" if c.ok else f"❌ FAIL {c.note}".rstrip()
+            out.append(f"| {c.tag} | {c.metric} | {fmt(c.fresh)} | "
+                       f"{fmt(c.base)} | {c.tol} | {verdict} |")
+        return out
+
+    fails = [c for c in checks if not c.ok]
+    passes = [c for c in checks if c.ok]
+    lines = [f"### report-gate: {len(fails)} breach(es), "
+             f"{len(passes)} metric(s) within tolerance", ""]
+    if fails:
+        lines += table(fails) + [""]
+    if passes:
+        lines += ["<details><summary>"
+                  f"{len(passes)} passing metric(s)</summary>", ""]
+        lines += table(passes)
+        lines += ["", "</details>", ""]
+    with open(path, "a") as fh:
+        fh.write("\n".join(lines) + "\n")
 
 
 def main() -> int:
@@ -226,17 +388,27 @@ def main() -> int:
                                          "BENCH_pixel_cascade.json"),
                     help="committed bench baseline (default: "
                          "benchmarks/BENCH_pixel_cascade.json)")
+    ap.add_argument("--bench-substrate", action="append", default=None,
+                    metavar="SUB",
+                    help="gate only bench rows whose baseline substrate "
+                         "matches (repeatable; e.g. pallas_interpret for "
+                         "PR-time CPU runners — compiled rows stay "
+                         "nightly-only)")
+    ap.add_argument("--summary-md", metavar="PATH", default=None,
+                    help="append a per-metric verdict table (markdown) to "
+                         "PATH — point this at $GITHUB_STEP_SUMMARY in CI")
     args = ap.parse_args()
     if not args.fresh and not args.bench_fresh:
         ap.error("need --fresh and/or --bench-fresh")
     breaches: List[str] = []
+    checks: List[Check] = []
     n = 0
     if args.fresh:
         if not glob.glob(os.path.join(args.fresh, "*.json")):
             print(f"report-gate: no fresh reports in {args.fresh}",
                   file=sys.stderr)
             return 2
-        breaches.extend(gate(args.fresh, args.baseline))
+        breaches.extend(gate(args.fresh, args.baseline, checks))
         n += len(glob.glob(os.path.join(args.fresh, "*.json")))
     if args.bench_fresh:
         if not os.path.exists(args.bench_fresh):
@@ -245,8 +417,11 @@ def main() -> int:
             return 2
         breaches.extend(f"bench: {b}"
                         for b in bench_gate(args.bench_fresh,
-                                            args.bench_baseline))
+                                            args.bench_baseline,
+                                            args.bench_substrate, checks))
         n += 1
+    if args.summary_md:
+        write_summary_md(args.summary_md, checks)
     if breaches:
         print(f"report-gate: {len(breaches)} breach(es):", file=sys.stderr)
         for b in breaches:

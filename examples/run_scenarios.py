@@ -13,7 +13,11 @@ each with its designated frontend and smoke-sized overrides (the
 interpreter/jit warmup instead of five.  Scenarios with the cloud->edge
 feedback loop enabled (``update_period_s`` set) additionally run the
 open-loop ablation (``update_period_s=None``) as a fifth
-``surveiledge_no_update`` row; multi-query scenarios add per-query rows
+``surveiledge_no_update`` row; scenarios with the bandwidth endgame on
+(``quantize_downlink`` / ``speculative_escalation``) add a
+``surveiledge_fp_wire`` ablation (full-width fp downlink, blocking
+escalation) so the quantized reduction and the speculative latency win
+are differential within one report; multi-query scenarios add per-query rows
 (``queries``) to the JSON so the Fig. 5 training-scheme trade is visible
 per query.
 
@@ -82,6 +86,15 @@ def check_consistency(name: str, scheme: str, summary: dict) -> None:
             f"{name}/{scheme}: model_updates="
             f"{summary['model_updates']} but zero downlink bytes — model "
             f"updates that never crossed the downlink")
+    # quantized-payload case: the charged wire bytes can never exceed the
+    # fp-equivalent cost of the same shipments — quantized > fp means the
+    # wire accounting double-charged (or the codec inflated the payload)
+    fp_down = summary.get("downlink_fp_bytes")
+    if fp_down is not None and bytes_down > fp_down:
+        raise ValueError(
+            f"{name}/{scheme}: downloaded_bytes={bytes_down} exceeds the "
+            f"fp-equivalent reference downlink_fp_bytes={fp_down} — "
+            f"quantized shipping cannot cost more than full-width fp")
 
 
 def validate(name: str, scheme: str, report) -> None:
@@ -144,13 +157,22 @@ def run_scenario(name: str, frontend_name: str, cameras: int,
           f"quer{'y' if len(sc.query_ids) == 1 else 'ies'} ==")
     print(f"{'scheme':22s}{'F2':>8s}{'avg_lat':>9s}{'p99':>9s}"
           f"{'WAN_MB':>8s}{'LAN_MB':>8s}{'DL_MB':>7s}{'upd':>5s}"
-          f"{'escal':>7s}{'rerouted':>9s}{'launches':>9s}{'l/tick':>7s}")
+          f"{'escal':>7s}{'flip':>7s}{'rerouted':>9s}{'launches':>9s}"
+          f"{'l/tick':>7s}")
     # the feedback loop's ablation rides along as a fifth row wherever
     # the loop is enabled: same stream, update_period_s=None
     variants = [(s, sc.with_scheme(s)) for s in SCHEMES]
     if sc.update_period_s is not None:
         variants.append(("surveiledge_no_update", dataclasses.replace(
             sc.with_scheme("surveiledge"), update_period_s=None)))
+    # the bandwidth-endgame ablation rides along wherever either knob is
+    # on: same stream, full-width fp downlink + blocking escalation.  The
+    # committed row pair is what lets the report gate check the quantized
+    # downlink reduction and the speculative latency win differentially.
+    if sc.quantize_downlink or sc.speculative_escalation:
+        variants.append(("surveiledge_fp_wire", dataclasses.replace(
+            sc.with_scheme("surveiledge"), quantize_downlink=False,
+            speculative_escalation=False)))
     per_scheme = {}
     for label, variant in variants:
         if frontend is not None:
@@ -175,8 +197,8 @@ def run_scenario(name: str, frontend_name: str, cameras: int,
               f"{s['avg_latency_s']:9.3f}{s['p99_latency_s']:9.3f}"
               f"{s['bandwidth_MB']:8.2f}{s['lan_MB']:8.2f}"
               f"{s['downloaded_MB']:7.2f}{s['model_updates']:5d}"
-              f"{s['escalated']:7d}{s['rerouted']:9d}"
-              f"{s['kernel_launches']:9d}"
+              f"{s['escalated']:7d}{s['reconciliation_flip_rate']:7.3f}"
+              f"{s['rerouted']:9d}{s['kernel_launches']:9d}"
               f"{s['launches_per_tick']:7.2f}")
         if r.queries and label == "surveiledge":
             for q, row in sorted(r.per_query_summary().items()):

@@ -30,6 +30,14 @@ class Task:
     #                               Transport — never fed to the node
     #                               latency estimators, which would let one
     #                               congestion burst bias Eq. 7 forever)
+    # speculative escalation (Scenario.speculative_escalation): the edge's
+    # provisional CQ verdict, served the instant the WAN upload *starts*
+    # and reconciled when the cloud's reclassify verdict lands — the
+    # stale-in-flight ModelUpdate delivery semantics generalized to
+    # verdicts.  None on non-speculative tasks; carried across failover so
+    # a stranded reclassify still reconciles against what was served.
+    provisional: Optional[bool] = None
+    t_provisional: Optional[float] = None     # when the edge served it
 
 
 @dataclasses.dataclass(frozen=True)

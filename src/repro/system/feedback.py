@@ -163,8 +163,14 @@ class FeedbackStage:
         self.model_updates += 1
         out = []
         for i, ((q, e), _) in enumerate(ready):
-            done = self.transport.wan_recv(t, self.sc.update_nbytes)
+            # ship through the downlink wire path: under quantize_downlink
+            # the (a, b) pair round-trips the int8 codec, so the edge
+            # applies the calibration it actually received, and the link
+            # is charged the real wire size instead of the fp width
+            done, vals = self.transport.ship_update(
+                t, self.sc.update_nbytes,
+                values=np.asarray([params[i, 0], params[i, 1]], np.float32))
             out.append((done, ModelUpdate(
-                e, (float(params[i, 0]), float(params[i, 1])),
+                e, (float(vals[0]), float(vals[1])),
                 query=q, kind="calibration")))
         return out

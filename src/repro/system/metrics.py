@@ -174,8 +174,23 @@ class QueryReport:
     #                                        charged on the cloud node
     # --- feedback loop (cloud -> edge online recalibration) -------------------
     downloaded_bytes: int = 0              # model updates over the downlink
+    #                                        (real wire size: int8-quantized
+    #                                        when Scenario.quantize_downlink)
+    downlink_fp_bytes: int = 0             # fp-equivalent downlink cost —
+    #                                        the differential reference the
+    #                                        quantized bytes are gated
+    #                                        against (== downloaded_bytes on
+    #                                        the fp path)
     model_updates: int = 0                 # fused calibrate launches (one
     #                                        ops.calibrate_fleet per event)
+    # --- speculative escalation (Scenario.speculative_escalation) -------------
+    provisional: int = 0                   # verdicts served at upload start
+    reconciled: int = 0                    # cloud answers reconciled against
+    #                                        a served provisional verdict
+    reconciliation_flips: int = 0          # reconciliations that changed
+    #                                        the answer (fed back as labels)
+    provisional_latency_sum: float = 0.0   # sum of arrival->provisional-serve
+    #                                        latencies (seconds)
     # simulated seconds-on-the-wire per link family (transfer time belongs
     # to transport, never to the node latency estimators)
     wan_transfer_s: float = 0.0
@@ -206,6 +221,15 @@ class QueryReport:
         if self.stream is not None:
             return self.stream.total.f_score(lam)
         return _f_score(self.decisions, self.truths, lam)
+
+    @property
+    def true_positives(self) -> int:
+        """Correctly answered query items — the denominator of the paper's
+        bandwidth-efficiency view (uplink bytes spent per useful answer)."""
+        if self.stream is not None:
+            return self.stream.total.tp
+        return int(np.count_nonzero(self.decisions & self.truths)) \
+            if len(self.decisions) else 0
 
     # --- latency --------------------------------------------------------------
     @property
@@ -325,7 +349,27 @@ class QueryReport:
             # raw bytes too: the loader's updates-without-downlink gate
             # must not be fooled by MB rounding on tiny payloads
             "downloaded_bytes": self.downloaded_bytes,
+            # fp-equivalent downlink cost: the quantized-shipping reduction
+            # is downlink_fp_bytes / downloaded_bytes within ONE row (and
+            # the gate rejects quantized > fp as a wire-accounting bug)
+            "downlink_fp_MB": round(self.downlink_fp_bytes / 1e6, 3),
+            "downlink_fp_bytes": self.downlink_fp_bytes,
             "model_updates": self.model_updates,
+            # bandwidth efficiency: WAN upload spent per correct positive
+            # answer (the paper's 7x-less-bandwidth headline, normalized)
+            "uplink_bytes_per_TP": round(
+                self.uploaded_bytes / max(self.true_positives, 1), 1),
+            # speculative escalation: how often the edge's provisional
+            # verdict disagreed with the cloud's, and how fast the edge
+            # actually answered escalated items
+            "reconciliation_flip_rate": round(
+                self.reconciliation_flips / self.reconciled, 4)
+            if self.reconciled else 0.0,
+            "provisional_latency_s": round(
+                self.provisional_latency_sum / self.provisional, 3)
+            if self.provisional else 0.0,
+            "provisional": self.provisional,
+            "reconciled": self.reconciled,
             "escalated": self.escalated,
             "rerouted": self.rerouted,
             "kernel_launches": self.kernel_launches,

@@ -140,17 +140,23 @@ class QueryPipeline:
         task, svc = self.nodes.begin(t, node)
         self.events.push(t + svc, ServiceDone(node, task, svc))
 
-    def _finish(self, t: float, node: int, it: Item, decision: bool) -> None:
+    def _finish(self, t: float, node: int, it: Item, decision: bool,
+                serve_t: Optional[float] = None) -> None:
+        # serve_t: when the user actually saw the answer.  For speculative
+        # escalations that is the provisional serve instant (upload start),
+        # not the reconcile instant ``t`` — latency and window placement
+        # follow what was served; accuracy follows the reconciled decision.
+        ts = t if serve_t is None else serve_t
         if self._agg is not None:
             # streaming windowed aggregates (metrics_window_s): O(1) per
             # item, no per-item arrays held for the report
-            self._agg.add(t, t - it.t_arrival, decision, it.is_query,
+            self._agg.add(ts, ts - it.t_arrival, decision, it.is_query,
                           it.query)
         else:
-            self._lat.append(t - it.t_arrival)
+            self._lat.append(ts - it.t_arrival)
             self._dec.append(decision)
             self._tru.append(it.is_query)
-            self._fin.append(t)
+            self._fin.append(ts)
             self._qid.append(it.query)
         self.nodes.served[node] += 1
 
@@ -338,6 +344,7 @@ class QueryPipeline:
             outs = self.triage_stage.triage_tick(ready)
         if not ready:
             return
+        sc_spec = self.sc.speculative_escalation
         for (q, edge), items in ready.items():
             routes, slots, conf_used = outs[(q, edge)]
             for it, route, slot, cal in zip(items, routes, slots,
@@ -351,15 +358,28 @@ class QueryPipeline:
                     decision = bool(cal > 0.5)
                 else:
                     decision = route == ACCEPT
-                self._enqueue(t, edge, Task(it, "classify", decision))
+                task = Task(it, "classify", decision)
+                if decision is None and sc_spec:
+                    # speculative escalation: remember the verdict the
+                    # edge's CQ would have given — it is served the
+                    # instant the upload starts (see _on_done) and
+                    # reconciled when the cloud answers
+                    task.provisional = bool(cal > 0.5)
+                self._enqueue(t, edge, task)
 
-    def _failover_task(self, it: Item) -> Task:
+    def _failover_task(self, it: Item, prior: Optional[Task] = None) -> Task:
         """A dead edge's work re-homed to a survivor: under edge_only the
         peer re-runs the CQ model (conf > 0.5); otherwise the heavyweight
-        re-classifier answers."""
+        re-classifier answers.  A stranded speculative reclassify keeps its
+        provisional verdict — the edge already served it, so the re-homed
+        cloud answer must still reconcile against it."""
         if self.sc.scheme == "edge_only":
             return Task(it, "classify", it.conf > 0.5)
-        return Task(it, "reclassify", None)
+        task = Task(it, "reclassify", None)
+        if prior is not None and prior.phase == "reclassify":
+            task.provisional = prior.provisional
+            task.t_provisional = prior.t_provisional
+        return task
 
     def _fail_node(self, t: float, node: int) -> None:
         """Edge death: drop it from Eq. 7, re-dispatch its queued and
@@ -370,7 +390,7 @@ class QueryPipeline:
         self.db.put(f"Q{node}", 0)
         for task in stranded:
             self._rerouted += 1
-            self._dispatch(t, node, self._failover_task(task.item),
+            self._dispatch(t, node, self._failover_task(task.item, task),
                            count_escalated=False)
         # items parked on this edge waiting for CQ weights die with it:
         # survivors' accurate models answer them (the weights that were in
@@ -408,12 +428,31 @@ class QueryPipeline:
         self.db.put(f"Q{node}", self.sched.nodes[node].queue_len)
         if task.phase == "reclassify":
             # accurate model == ground truth (paper: ResNet-152) — and an
-            # exact label for the home edge's CQ score (feedback loop)
+            # exact label for the home edge's CQ score (feedback loop);
+            # a reconciliation FLIP is exactly the label the calibrator
+            # most needs, so flips feed the ring buffers like any verdict
             self.feedback.observe(t, task.item)
-            self._finish(t, node, task.item, task.item.is_query)
+            if task.provisional is not None:
+                # reconcile the speculatively served verdict: accuracy
+                # counts the cloud's answer, latency counts the moment
+                # the edge actually answered the user
+                self._reconciled += 1
+                if task.provisional != task.item.is_query:
+                    self._flips += 1
+                self._finish(t, node, task.item, task.item.is_query,
+                             serve_t=task.t_provisional)
+            else:
+                self._finish(t, node, task.item, task.item.is_query)
         elif task.decision is None:              # escalate: ship onward
-            self._dispatch(t, node, Task(task.item, "reclassify", None),
-                           count_escalated=True)
+            nxt = Task(task.item, "reclassify", None)
+            if task.provisional is not None:
+                # the upload starts NOW: the edge serves its provisional
+                # verdict immediately (counted here, reconciled above)
+                nxt.provisional = task.provisional
+                nxt.t_provisional = t
+                self._provisional += 1
+                self._prov_lat_sum += t - task.item.t_arrival
+            self._dispatch(t, node, nxt, count_escalated=True)
         else:
             self._finish(t, node, task.item, task.decision)
         if self.nodes.queues[node]:
@@ -437,6 +476,12 @@ class QueryPipeline:
         self._qid: List[int] = []
         self._escalated = 0
         self._rerouted = 0
+        # speculative-escalation accounting: served provisionals, cloud
+        # reconciliations, verdict flips, sum of provisional latencies
+        self._provisional = 0
+        self._reconciled = 0
+        self._flips = 0
+        self._prov_lat_sum = 0.0
         # (query, edge) -> items waiting for that query's CQ weights to
         # reach that edge; edge -> items released by a delivery, absorbed
         # by the next tick's fused launch
@@ -547,7 +592,12 @@ class QueryPipeline:
                     for e in sorted(self.sc.edge_ids):
                         if e in self.nodes.dead:
                             continue
-                        done = self.transport.wan_recv(t, self.sc.cq_nbytes)
+                        # weights ship through the quantized wire path
+                        # (simulated model: byte accounting only — the
+                        # accuracy cost of int8 CQ weights is measured by
+                        # the report gate's F2 band, not re-simulated)
+                        done, _ = self.transport.ship_update(
+                            t, self.sc.cq_nbytes)
                         self.events.push(done, ModelUpdate(
                             e, None, query=ev.query, kind="weights"))
             elif isinstance(ev, QueryRetire):
@@ -626,7 +676,12 @@ class QueryPipeline:
             uploaded_bytes=self.transport.uploaded_bytes,
             lan_bytes=self.transport.lan_bytes,
             downloaded_bytes=self.transport.downloaded_bytes,
+            downlink_fp_bytes=self.transport.downlink_fp_bytes,
             model_updates=self.feedback.model_updates,
+            provisional=self._provisional,
+            reconciled=self._reconciled,
+            reconciliation_flips=self._flips,
+            provisional_latency_sum=self._prov_lat_sum,
             wan_transfer_s=self.transport.wan_transfer_s,
             lan_transfer_s=self.transport.lan_transfer_s,
             escalated=self._escalated,

@@ -97,6 +97,24 @@ class Scenario:
     train_step_s: float = 0.05               # cloud seconds per fine-tune step
     #                                          (Fig. 5 cost model's knob)
     cq_nbytes: int = 4 * 1024 * 1024         # per-edge CQ weight shipment
+    # --- bandwidth endgame ----------------------------------------------------
+    # ship every WAN-downlink model artifact (per-query CQ weights, Platt
+    # calibration heads) int8-quantized (distributed/quantize.py wire
+    # format): the link is charged the real quantized byte count — scale/
+    # zero-point overhead included — and shipped calibration values
+    # round-trip encode->decode, so the edge applies the (slightly lossy)
+    # parameters it actually received.  False keeps the full-width fp path
+    # as the differential reference; QueryReport.downlink_fp_bytes records
+    # the fp-equivalent cost either way, so one row shows the reduction.
+    quantize_downlink: bool = False
+    # serve escalations speculatively: while an escalated crop's WAN upload
+    # is in flight, the edge emits its provisional CQ verdict (calibrated
+    # conf > 0.5) immediately and reconciles when the cloud's reclassify
+    # verdict lands — the stale-in-flight ModelUpdate delivery semantics
+    # generalized to verdicts.  Escalated items' reported latency becomes
+    # the provisional serve time; accuracy still counts the reconciled
+    # (cloud) verdict, and the flip rate is reported and gated.
+    speculative_escalation: bool = False
     # --- stream --------------------------------------------------------------
     seed: int = 0
     items: Optional[Sequence[Item]] = None   # injected pre-scored stream
@@ -491,6 +509,9 @@ def drifting_city(num_cameras: int = 12, num_edges: int = 4,
                     escalation_capacity=kw.pop("escalation_capacity", 3),
                     edge_service_s=kw.pop("edge_service_s", 0.04),
                     offload_drain_s=kw.pop("offload_drain_s", 8.0),
+                    quantize_downlink=kw.pop("quantize_downlink", True),
+                    speculative_escalation=kw.pop(
+                        "speculative_escalation", True),
                     drift_at_s=drift_at, update_period_s=update, **kw)
 
 
@@ -524,6 +545,9 @@ def multi_query_city(num_cameras: int = 12, num_edges: int = 4,
     return Scenario(name="multi_query_city", edge_speeds=speeds,
                     num_cameras=num_cameras, duration_s=duration,
                     queries=queries,
+                    quantize_downlink=kw.pop("quantize_downlink", True),
+                    speculative_escalation=kw.pop(
+                        "speculative_escalation", True),
                     train_step_s=kw.pop("train_step_s", duration / 1800.0),
                     update_period_s=kw.pop("update_period_s", 10.0), **kw)
 

@@ -18,6 +18,9 @@ congestion, double-counting it.
 """
 from __future__ import annotations
 
+import numpy as np
+
+from repro.distributed import quantize as QZ
 from repro.serving.bus import FifoLink
 from repro.system.scenario import Scenario
 
@@ -30,8 +33,10 @@ class Transport:
         self._downlink = FifoLink(sc.downlink_MBps, sc.rtt_s)
         self._lan_MBps = sc.lan_MBps
         self._rtt_s = sc.rtt_s
+        self._quantize = sc.quantize_downlink
         self.uploaded_bytes = 0     # shipped over the shared WAN uplink
         self.downloaded_bytes = 0   # shipped over the WAN downlink (updates)
+        self.downlink_fp_bytes = 0  # fp-equivalent downlink cost (reference)
         self.lan_bytes = 0          # shipped edge-to-edge
         self.wan_transfer_s = 0.0   # cumulative uplink seconds-on-the-wire
         self.downlink_transfer_s = 0.0
@@ -52,6 +57,26 @@ class Transport:
         done = self._downlink.send(t, nbytes)
         self.downlink_transfer_s += done - t
         return done
+
+    def ship_update(self, t: float, fp_nbytes: int, values=None):
+        """Ship one ModelUpdate artifact cloud -> edge at ``t``.
+
+        Returns ``(delivery_time, values_as_delivered)``.  Under
+        ``Scenario.quantize_downlink`` the link is charged the exact int8
+        wire size (``quantize.quantized_wire_nbytes`` — values + per-channel
+        scale/zero + framing) and any materialized ``values`` round-trip
+        encode->decode, so the edge applies the parameters it actually
+        received, quantization error included.  ``downlink_fp_bytes``
+        always accumulates the full-width cost: it is the differential
+        reference the report gate compares the charged bytes against."""
+        self.downlink_fp_bytes += fp_nbytes
+        if self._quantize:
+            nbytes = QZ.quantized_wire_nbytes(fp_nbytes)
+            if values is not None:
+                values = QZ.decode_wire(QZ.encode_wire(np.asarray(values)))
+        else:
+            nbytes = fp_nbytes
+        return self.wan_recv(t, nbytes), values
 
     def lan_send(self, t: float, nbytes: int) -> float:
         """Edge-to-edge transfer: dedicated link, non-contending."""

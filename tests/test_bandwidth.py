@@ -1,0 +1,258 @@
+"""Bandwidth endgame: int8 wire codec round-trip/byte accounting,
+``Transport.ship_update`` charging the real quantized size, the e2e
+quantized-downlink reduction vs the fp reference (>= 3x within the F2
+band), and speculative escalation (identical decisions, lower escalated
+latency, flips feeding the feedback ring buffers, in-flight escalations
+reconciling across query retirement and edge failure)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.distributed import quantize as QZ
+from repro.serving.simulator import Item
+from repro.system import (
+    Scenario,
+    drifting_city,
+    multi_query_city,
+    run_query,
+    single_edge,
+    straggler_edge,
+    synthetic_confidence_stream,
+)
+from repro.system.events import Task
+from repro.system.pipeline import QueryPipeline
+from repro.system.transport import Transport
+
+# --- wire codec round-trip ----------------------------------------------------
+
+
+def test_wire_roundtrip_error_within_half_scale():
+    rng = np.random.default_rng(0)
+    for shape in [(2,), (7,), (4, 33), (3, 8, 8)]:
+        x = rng.normal(size=shape).astype(np.float32) * rng.uniform(0.1, 40)
+        p = QZ.encode_wire(x)
+        got = QZ.decode_wire(p)
+        assert got.shape == x.shape and got.dtype == np.float32
+        # affine grid fitted to each channel's [min, max]: error is
+        # bounded by scale/2 per element, no clipping error anywhere
+        rows = x.reshape(p.scale.size, -1)
+        err = np.abs(got.reshape(p.scale.size, -1) - rows)
+        assert np.all(err <= p.scale[:, None] / 2 + 1e-7)
+
+
+def test_wire_constant_channel_roundtrips_bit_exact():
+    x = np.full((3, 17), 0.731, np.float32)
+    x[1] = -2.5
+    got = QZ.decode_wire(QZ.encode_wire(x))
+    np.testing.assert_array_equal(got, x)
+
+
+def test_wire_platt_pair_roundtrip_is_tight():
+    """The payload feedback.py actually ships: a Platt (a, b) pair.  One
+    channel spanning [b, a] — round-trip error <= (a - b) / 254 / 2."""
+    ab = np.asarray([1.73, -0.42], np.float32)
+    got = QZ.decode_wire(QZ.encode_wire(ab))
+    assert np.all(np.abs(got - ab) <= (ab.max() - ab.min()) / 254 / 2 + 1e-7)
+
+
+def test_wire_nbytes_exact():
+    x = np.zeros((4, 300), np.float32)            # 4 channels of 300 values
+    p = QZ.encode_wire(x)
+    assert p.nbytes == QZ.WIRE_HEADER_NBYTES + 1200 + 8 * 4
+    # the simulator-side accounting for a payload it never materializes:
+    # 64 KB fp32 -> 16384 values -> 64 channels of (scale, zero) overhead
+    assert QZ.quantized_wire_nbytes(64 * 1024) == \
+        QZ.WIRE_HEADER_NBYTES + 16384 + 8 * 64
+    # ~3.9x, never a free 4x: the overhead is charged
+    assert 3.5 < (64 * 1024) / QZ.quantized_wire_nbytes(64 * 1024) < 4.0
+    with pytest.raises(ValueError):
+        QZ.quantized_wire_nbytes(-1)
+
+
+@pytest.mark.slow
+def test_wire_roundtrip_property_over_weight_shapes():
+    hypothesis = pytest.importorskip(
+        "hypothesis",
+        reason="property tests need hypothesis (pip install -r "
+               "requirements-dev.txt)")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.lists(st.integers(1, 17), min_size=1, max_size=3),
+           st.floats(1e-3, 1e3), st.integers(0, 2 ** 31 - 1))
+    def prop(shape, spread, seed):
+        rng = np.random.default_rng(seed)
+        x = (rng.normal(size=tuple(shape)) * spread).astype(np.float32)
+        p = QZ.encode_wire(x)
+        got = QZ.decode_wire(p)
+        rows = x.reshape(p.scale.size, -1)
+        err = np.abs(got.reshape(p.scale.size, -1) - rows)
+        tol = p.scale[:, None] / 2 + 1e-6 * max(spread, 1.0)
+        assert np.all(err <= tol)
+        # wire size: header + one byte per value + 8 per channel, and the
+        # channel count matches the leading dim (or 1 for vectors)
+        channels = x.shape[0] if x.ndim >= 2 else 1
+        assert p.scale.size == channels
+        assert p.nbytes == QZ.WIRE_HEADER_NBYTES + x.size + 8 * channels
+
+    prop()
+
+
+# --- Transport.ship_update byte accounting ------------------------------------
+
+
+def _transports():
+    sc = single_edge(num_cameras=2, duration_s=1.0)
+    return (Transport(dataclasses.replace(sc, quantize_downlink=True)),
+            Transport(dataclasses.replace(sc, quantize_downlink=False)))
+
+
+def test_ship_update_charges_exact_quantized_bytes():
+    tq, tf = _transports()
+    fp = 64 * 1024
+    tq.ship_update(0.0, fp)
+    tf.ship_update(0.0, fp)
+    assert tq.downloaded_bytes == QZ.quantized_wire_nbytes(fp)
+    assert tq.downlink_fp_bytes == fp
+    # the fp path's charged bytes and reference coincide bit-exactly
+    assert tf.downloaded_bytes == tf.downlink_fp_bytes == fp
+    assert tq.downloaded_bytes < tf.downloaded_bytes
+
+
+def test_ship_update_roundtrips_values_only_when_quantizing():
+    tq, tf = _transports()
+    vals = np.asarray([1.73, -0.42], np.float32)
+    _, got_q = tq.ship_update(0.0, 8, values=vals)
+    _, got_f = tf.ship_update(0.0, 8, values=vals)
+    assert got_f is vals                     # fp path: bit-identical object
+    assert got_q is not vals                 # quantized: codec round-trip
+    np.testing.assert_allclose(got_q, vals, atol=0.01)
+    assert not np.array_equal(got_q, vals) or np.ptp(vals) == 0
+
+
+def test_ship_update_accumulates_across_shipments():
+    tq, _ = _transports()
+    for k in range(5):
+        tq.ship_update(float(k), 4096)
+    assert tq.downlink_fp_bytes == 5 * 4096
+    assert tq.downloaded_bytes == 5 * QZ.quantized_wire_nbytes(4096)
+
+
+# --- e2e: quantized shipping reduction within the accuracy band ---------------
+
+
+@pytest.mark.parametrize("preset", [multi_query_city, drifting_city])
+def test_quantized_downlink_reduction_within_f2_band(preset):
+    """Acceptance: on multi_query_city and drifting_city the quantized
+    downlink is >= 3x smaller than the fp reference with |dF2| <= 0.05."""
+    sc = preset(num_cameras=6, duration_s=30.0, seed=0)
+    assert sc.quantize_downlink and sc.speculative_escalation
+    rq = run_query(sc)
+    rf = run_query(dataclasses.replace(sc, quantize_downlink=False,
+                                       speculative_escalation=False))
+    assert rq.model_updates > 0              # the loop really shipped
+    # within ONE row: fp-equivalent cost vs charged quantized bytes
+    assert rq.downlink_fp_bytes >= 3 * rq.downloaded_bytes
+    # and across the ablation pair the fp run's charged bytes match its
+    # own reference while the quantized run's sit >= 3x below them
+    assert rf.downloaded_bytes == rf.downlink_fp_bytes
+    assert abs(rq.f_score(2.0) - rf.f_score(2.0)) <= 0.05
+
+
+# --- speculative escalation ---------------------------------------------------
+
+
+def _spec_pair(**kw):
+    sc = single_edge(num_cameras=6, duration_s=30.0, seed=3,
+                     **kw).with_scheme("surveiledge_fixed")
+    stream = synthetic_confidence_stream(sc)
+    on = run_query(dataclasses.replace(sc, speculative_escalation=True),
+                   items=stream)
+    off = run_query(dataclasses.replace(sc, speculative_escalation=False),
+                    items=stream)
+    return on, off
+
+
+def test_speculation_serves_same_decisions_sooner():
+    """Speculation is pure serving-time accounting: the cloud's verdict
+    still decides every escalated item (decisions identical), but the
+    latency clock stops at the provisional serve instant."""
+    on, off = _spec_pair()
+    assert on.escalated == off.escalated > 0
+    assert on.provisional == on.reconciled == on.escalated
+    assert off.provisional == off.reconciled == 0
+    assert on.f_score(2.0) == off.f_score(2.0)
+    assert on.n_items == off.n_items
+    assert on.avg_latency < off.avg_latency
+    s = on.summary()
+    assert 0.0 <= s["reconciliation_flip_rate"] <= 1.0
+    assert 0.0 < s["provisional_latency_s"] < off.avg_latency
+
+
+def test_flip_feeds_feedback_and_serves_at_provisional_time():
+    """A reconciliation that flips the verdict (provisional False, cloud
+    True) must count as a flip, feed the feedback ring buffer like any
+    cloud label, and finish the item at the PROVISIONAL serve time."""
+    sc = Scenario(name="unit", edge_speeds=(1.0,), num_cameras=1,
+                  duration_s=5.0, update_period_s=2.0,
+                  speculative_escalation=True)
+    p = QueryPipeline(sc)
+    p.run([])                                # initialize run-scoped state
+    it = Item(t_arrival=0.0, camera=0, edge_device=1, conf=0.4,
+              is_query=True)
+    task = Task(it, "reclassify", None, provisional=False,
+                t_provisional=1.0)
+    p.nodes.push(1, task)
+    p.sched.on_enqueue(1)
+    started, svc = p.nodes.begin(0.0, 1)
+    p._on_done(9.0, 1, started, svc)
+    assert p._reconciled == 1 and p._flips == 1
+    assert p.feedback.labels_seen == 1
+    buf = p.feedback.buffers[(0, 1)]
+    assert len(buf) == 1 and buf[0][2] is True     # cloud truth, not the
+    #                                                provisional verdict
+    assert p._lat == [1.0]                   # t_provisional - t_arrival
+    assert p._dec == [True]                  # ...but the RECONCILED answer
+
+
+def test_agreeing_reconciliation_is_not_a_flip():
+    sc = Scenario(name="unit", edge_speeds=(1.0,), num_cameras=1,
+                  duration_s=5.0, speculative_escalation=True)
+    p = QueryPipeline(sc)
+    p.run([])
+    it = Item(t_arrival=0.0, camera=0, edge_device=1, conf=0.9,
+              is_query=True)
+    task = Task(it, "reclassify", None, provisional=True, t_provisional=0.5)
+    p.nodes.push(1, task)
+    p.sched.on_enqueue(1)
+    started, svc = p.nodes.begin(0.0, 1)
+    p._on_done(4.0, 1, started, svc)
+    assert p._reconciled == 1 and p._flips == 0
+
+
+def test_inflight_escalations_reconcile_at_query_retire():
+    """multi_query_city retires q1 near the end of the run while
+    escalations ride the WAN: every served provisional verdict must still
+    reconcile — retirement never strands a speculative answer."""
+    sc = multi_query_city(num_cameras=6, duration_s=30.0, seed=1)
+    r = run_query(sc)
+    assert r.provisional == r.reconciled == r.escalated > 0
+    assert any(spec.get("t_retire_s") is not None
+               for spec in r.queries.values())
+
+
+def test_inflight_escalations_reconcile_across_edge_failure():
+    """An edge dying with speculative reclassify work queued on it must
+    not lose the served verdicts: failover carries provisional state, so
+    reconciled still equals provisional at run end."""
+    # slow uplink makes the cloud expensive under Eq. 7, so escalations
+    # land on peer edges — and straggler_edge kills one of those edges
+    # two-thirds in, stranding queued reclassify work mid-speculation
+    sc = dataclasses.replace(
+        straggler_edge(num_cameras=6, duration_s=30.0, seed=5,
+                       uplink_MBps=0.05),
+        speculative_escalation=True)
+    r = run_query(sc)
+    assert r.rerouted > 0                    # the failure really happened
+    assert r.provisional == r.reconciled > 0

@@ -225,3 +225,134 @@ def test_bench_gate_on_committed_baseline():
                  / rows["staged_interpret"]["Mpx_s"])
         assert ratio >= 2.0, (key, ratio)
         assert "roofline_fraction" in shape["roofline"]["fused"]
+
+
+# --- bandwidth-endgame columns + fresh-row consistency ------------------------
+
+from report_gate import (  # noqa: E402
+    Check,
+    TOLERANCES,
+    row_consistency,
+    write_summary_md,
+)
+
+
+def test_downlink_columns_are_gated():
+    """The new bandwidth columns sit under tolerance bands like the
+    legacy ones: fp-reference drift and flip-rate drift both breach."""
+    assert "downlink_fp_MB" in TOLERANCES
+    assert "uplink_bytes_per_TP" in TOLERANCES
+    assert "reconciliation_flip_rate" in TOLERANCES
+    assert "provisional_latency_s" in TOLERANCES
+    base = _doc()
+    row = base["schemes"]["surveiledge"]
+    row.update(downlink_fp_MB=4.0, reconciliation_flip_rate=0.02,
+               provisional_latency_s=1.0, uplink_bytes_per_TP=50000.0)
+    fresh = copy.deepcopy(base)
+    fresh["schemes"]["surveiledge"]["downlink_fp_MB"] = 8.0   # +100%
+    breaches = compare_report(base, fresh)
+    assert len(breaches) == 1 and "downlink_fp_MB" in breaches[0]
+    fresh = copy.deepcopy(base)
+    fresh["schemes"]["surveiledge"]["reconciliation_flip_rate"] = 0.3
+    breaches = compare_report(base, fresh)
+    assert len(breaches) == 1 and "reconciliation_flip_rate" in breaches[0]
+    # within-band wobbles pass
+    fresh = copy.deepcopy(base)
+    fresh["schemes"]["surveiledge"]["reconciliation_flip_rate"] = 0.05
+    fresh["schemes"]["surveiledge"]["downlink_fp_MB"] = 4.5
+    assert compare_report(base, fresh) == []
+
+
+def test_row_consistency_updates_without_downlink():
+    bad = {"model_updates": 3, "downloaded_MB": 0.0, "downloaded_bytes": 0}
+    msgs = row_consistency("toy/surveiledge", bad)
+    assert len(msgs) == 1 and "zero downlink" in msgs[0]
+    ok = {"model_updates": 3, "downloaded_bytes": 24}
+    assert row_consistency("toy/surveiledge", ok) == []
+
+
+def test_row_consistency_quantized_exceeding_fp_fails():
+    """Satellite bugfix: model_updates > 0 with quantized bytes LARGER
+    than the row's fp reference is a wire-accounting bug, not drift."""
+    bad = {"model_updates": 2, "downloaded_bytes": 5000,
+           "downlink_fp_bytes": 4000}
+    msgs = row_consistency("toy/surveiledge", bad)
+    assert len(msgs) == 1 and "fp-equivalent" in msgs[0]
+    ok = {"model_updates": 2, "downloaded_bytes": 1300,
+          "downlink_fp_bytes": 4000}
+    assert row_consistency("toy/surveiledge", ok) == []
+
+
+def test_gate_fails_on_quantized_exceeding_fp_end_to_end():
+    """compare_report applies the consistency check to FRESH rows even
+    when the baseline pair is otherwise within tolerance."""
+    base = _doc()
+    fresh = copy.deepcopy(base)
+    fresh["schemes"]["surveiledge"].update(
+        model_updates=2, downloaded_bytes=5000, downlink_fp_bytes=4000)
+    breaches = compare_report(base, fresh)
+    assert any("fp-equivalent" in b for b in breaches)
+
+
+# --- --summary-md verdict table ----------------------------------------------
+
+
+def test_summary_md_lists_failures_before_passes(tmp_path):
+    checks = []
+    base = _doc()
+    fresh = copy.deepcopy(base)
+    fresh["schemes"]["surveiledge"]["accuracy_F2"] -= 0.2
+    compare_report(base, fresh, checks)
+    assert any(not c.ok for c in checks)
+    assert any(c.ok for c in checks)
+    out = tmp_path / "summary.md"
+    write_summary_md(str(out), checks)
+    text = out.read_text()
+    assert "accuracy_F2" in text
+    assert text.index("❌") < text.index("<details>")
+    assert "✅" in text and "| artifact |" in text
+    # appends (GITHUB_STEP_SUMMARY semantics), never truncates
+    write_summary_md(str(out), checks)
+    assert len(out.read_text()) > len(text)
+
+
+def test_summary_md_records_passing_metrics_too(tmp_path):
+    checks = []
+    compare_report(_doc(), _doc(), checks)
+    assert checks and all(c.ok for c in checks)
+    out = tmp_path / "summary.md"
+    write_summary_md(str(out), checks)
+    text = out.read_text()
+    assert "0 breach(es)" in text and "❌" not in text
+
+
+def test_bench_gate_collects_checks(tmp_path):
+    checks = []
+    fresh = copy.deepcopy(_bench_doc())
+    fresh["shapes"]["B4_96x128"]["rows"]["fused_compiled"]["Mpx_s"] = 60.0
+    bench_gate(*_bench_pair(tmp_path, _bench_doc(), fresh), checks=checks)
+    bad = [c for c in checks if not c.ok]
+    assert len(bad) == 1 and bad[0].metric == "Mpx_s"
+    assert isinstance(bad[0], Check) and bad[0].tol.endswith("one-sided")
+
+
+# --- --bench-substrate filter (PR-time CPU runner) ---------------------------
+
+
+def test_bench_substrate_filter_skips_other_substrates(tmp_path):
+    """A regression in an xla_ref (compiled-tier) row must NOT fail a
+    gate restricted to pallas_interpret rows — compiled rows remain
+    nightly/TPU business on a PR CPU runner."""
+    fresh = copy.deepcopy(_bench_doc())
+    fresh["shapes"]["B4_96x128"]["rows"]["fused_compiled"]["Mpx_s"] = 10.0
+    pair = _bench_pair(tmp_path, _bench_doc(), fresh)
+    assert bench_gate(*pair, substrates=["pallas_interpret"]) == []
+    assert bench_gate(*pair) != []           # unfiltered still catches it
+
+
+def test_bench_substrate_filter_still_gates_matching_rows(tmp_path):
+    fresh = copy.deepcopy(_bench_doc())
+    fresh["shapes"]["B4_96x128"]["rows"]["staged_interpret"]["Mpx_s"] = 1.0
+    pair = _bench_pair(tmp_path, _bench_doc(), fresh)
+    breaches = bench_gate(*pair, substrates=["pallas_interpret"])
+    assert len(breaches) == 1 and "staged_interpret" in breaches[0]
