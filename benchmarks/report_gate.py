@@ -15,6 +15,10 @@ on any breach of:
     flag on noise)
   * per-query rows (multi-query scenarios): each query's ``f2`` and
     ``avg_latency_s``, same bands
+  * control-plane columns (``rush_hour``): ``shed_rate`` (±0.10 abs),
+    ``alerts_total`` (coarse 50% band), per-tier p99 latencies — and
+    ``slo_breach_top_tier`` at ZERO tolerance (the preset exists to
+    prove the platinum tier never breaches)
   * structure — a fresh report missing a baseline scenario/scheme/query
     (or vice versa) is a breach: new scenarios ship WITH their committed
     baselines, retired ones delete them
@@ -82,6 +86,17 @@ TOLERANCES: Dict[str, Tuple[str, float, float]] = {
     "uplink_bytes_per_TP": ("rel", 0.25, 256.0),
     "reconciliation_flip_rate": ("abs", 0.05, 0.0),
     "provisional_latency_s": ("rel", 0.25, 0.05),
+    # control-plane columns (rush_hour): admission shed fraction, alert
+    # volume (coarse band — queue-depth alerts ride load noise), and the
+    # per-tier tail latencies.  slo_breach_top_tier is zero-band: the
+    # preset's whole point is that the platinum tier NEVER breaches, so
+    # any drift there is a regression, not noise.
+    "shed_rate": ("abs", 0.10, 0.0),
+    "alerts_total": ("rel", 0.50, 3.0),
+    "slo_breach_top_tier": ("abs", 0.0, 0.0),
+    "p99_latency_tier0": ("rel", 0.25, 0.10),
+    "p99_latency_tier1": ("rel", 0.25, 0.10),
+    "p99_latency_tier2": ("rel", 0.25, 0.10),
 }
 PER_QUERY_TOLERANCES: Dict[str, Tuple[str, float, float]] = {
     "f2": ("abs", 0.05, 0.0),
@@ -179,6 +194,23 @@ def row_consistency(tag: str, row: dict,
         out.append(msg)
         _note(checks, tag, "downloaded_bytes", down, fp_down,
               "<= downlink_fp_bytes", False, msg)
+    # only the full adaptive scheme carries the zero-breach guarantee:
+    # the ablation rows (fixed thresholds, edge_only, cloud_only) breach
+    # tier 0 BY DESIGN — that contrast is the table's whole argument
+    if tag.endswith("/surveiledge") \
+            and row.get("slo_breach_top_tier", 0) > 0:
+        msg = (f"slo_breach_top_tier={row['slo_breach_top_tier']} — the "
+               f"top priority tier breached its SLO; admission control "
+               f"failed to protect it")
+        out.append(msg)
+        _note(checks, tag, "slo_breach_top_tier",
+              row["slo_breach_top_tier"], 0, "== 0", False, msg)
+    if row.get("shed_queries", 0) > 0 and row.get("alerts_total", 0) == 0:
+        msg = (f"shed_queries={row['shed_queries']} but alerts_total=0 — "
+               f"admission shed queries without publishing alert events")
+        out.append(msg)
+        _note(checks, tag, "alerts_total", 0, row.get("shed_queries"),
+              "> 0 when sheds > 0", False, msg)
     return out
 
 

@@ -68,6 +68,7 @@ SMOKE_OVERRIDES = {
     "multi_query_city": dict(cameras=8, duration=60.0),
     "query_churn": dict(cameras=8, duration=60.0),
     "pixel_city": dict(frontend="pixel", duration=10.0),
+    "rush_hour": dict(cameras=4, duration=40.0),
 }
 
 
@@ -95,6 +96,16 @@ def check_consistency(name: str, scheme: str, summary: dict) -> None:
             f"{name}/{scheme}: downloaded_bytes={bytes_down} exceeds the "
             f"fp-equivalent reference downlink_fp_bytes={fp_down} — "
             f"quantized shipping cannot cost more than full-width fp")
+    # admission sheds publish alerts/admission/<reason> events: a row
+    # claiming shed queries with a silent alert stream means the control
+    # plane dropped work without telling anyone — an unobservable shed is
+    # an outage, not a policy
+    if summary.get("shed_queries", 0) > 0 \
+            and summary.get("alerts_total", 0) == 0:
+        raise ValueError(
+            f"{name}/{scheme}: shed_queries={summary['shed_queries']} but "
+            f"alerts_total=0 — admission shed queries without publishing "
+            f"alert events")
 
 
 def validate(name: str, scheme: str, report) -> None:

@@ -79,6 +79,32 @@ class Scheduler:
             raise ValueError("no eligible node (all excluded or down)")
         return best
 
+    # --- SLO-weighted Eq. 7 (priority tiers) ----------------------------------
+    def slo_pressure(self, weight: float, slack_s: float,
+                     base_extra: Optional[Dict[int, float]] = None
+                     ) -> Dict[int, float]:
+        """Per-node extra cost making Eq. 7 deadline-aware.
+
+        For an item with ``slack_s`` seconds left on its tier's SLO, every
+        node whose effective drain (its queue drain plus any
+        ``base_extra`` — e.g. the cloud's WAN backlog) exceeds the slack
+        pays ``weight * (drain - slack)`` on top of its Q_j * t_j cost: a
+        node that would already miss the deadline is penalized in
+        proportion to how badly, while nodes inside the slack keep the
+        plain Eq. 7 argmin.  ``weight == 0`` (the tierless default)
+        returns ``base_extra`` unchanged — bit-identical allocation."""
+        base = base_extra or {}
+        if weight <= 0.0:
+            return base
+        out = dict(base)
+        for nid, n in self.nodes.items():
+            if not n.up:
+                continue
+            over = n.drain_time + base.get(nid, 0.0) - slack_s
+            if over > 0.0:
+                out[nid] = out.get(nid, 0.0) + weight * over
+        return out
+
     # --- node liveness --------------------------------------------------------
     def mark_down(self, node_id: int) -> None:
         """Take a node out of Eq. 7 rotation (failed-edge scenarios)."""

@@ -1,0 +1,65 @@
+"""Alert/health stream over the control-plane bus.
+
+Every operationally interesting condition the engine detects is published
+on the ``Bus`` under ``alerts/<scope>/<kind>``:
+
+  alerts/admission/quota       a tenant's token bucket ran dry
+  alerts/admission/backlog     cloud fine-tune backlog shed a submission
+  alerts/edge<e>/failover      edge died; its work re-dispatched
+  alerts/edge<e>/shed_batch    overloaded edge shed a tick's raw batch
+  alerts/edge<e>/queue_depth   sampled queue depth above the alert line
+  alerts/edge<e>/threshold_drift  Eqs. 8-9 bracket drifted past the line
+
+``AlertStream`` is the in-process consumer (the dashboard analogue): it
+subscribes ``alerts/#`` and keeps (a) per-kind counts — the stable,
+seed-robust aggregate ``QueryReport`` snapshots and the report gate
+bands — and (b) a bounded ring of the most recent alerts with their full
+topic and payload, for debugging and the demo CLI.  External consumers
+subscribe the same topics on the same bus; nothing here is load-bearing
+for the engine's decisions (alerts observe, never steer).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Deque, Dict
+
+
+@dataclasses.dataclass(frozen=True)
+class Alert:
+    t: float
+    topic: str
+    payload: Any
+
+
+class AlertStream:
+    """Bus-subscribed alert aggregator (counts by kind + recent ring)."""
+
+    def __init__(self, bus, keep: int = 256):
+        self._bus = bus
+        self.counts: Dict[str, int] = {}
+        self.recent: Deque[Alert] = collections.deque(maxlen=keep)
+        bus.subscribe("alerts/#", self._on_alert)
+
+    def _on_alert(self, topic: str, payload: Any) -> None:
+        # aggregate by the kind segment ("failover", "quota", ...): the
+        # scope segment carries a node id, which varies with seed and
+        # would make the report-gate baseline dict churn per run shape
+        kind = topic.rsplit("/", 1)[-1]
+        self.counts[kind] = self.counts.get(kind, 0) + 1
+        t = payload.get("t", 0.0) if isinstance(payload, dict) else 0.0
+        self.recent.append(Alert(float(t), topic, payload))
+
+    @property
+    def total(self) -> int:
+        return sum(self.counts.values())
+
+    def snapshot(self) -> Dict[str, int]:
+        """Per-kind counts, sorted by kind (the ``QueryReport.alerts``
+        payload)."""
+        return dict(sorted(self.counts.items()))
+
+    def close(self) -> None:
+        """Detach from the bus (safe mid-delivery: publish iterates a
+        snapshot of the subscription list)."""
+        self._bus.unsubscribe("alerts/#", self._on_alert)

@@ -1,14 +1,20 @@
 """In-process publish/subscribe message bus (the MQTT/Mosquitto analogue).
 
-Topic-based, synchronous delivery, wildcard '#' suffix supported — enough to
-mirror the paper's control plane (parameter updates, task dispatch, results)
-without a broker dependency.
+Topic-based, synchronous delivery, MQTT-style trailing '#' wildcard —
+enough to mirror the paper's control plane (parameter updates, task
+dispatch, results, and the serving layer's alert/health stream) without a
+broker dependency.
+
+The '#' wildcard is segment-anchored, as in MQTT: ``edges/#`` matches
+``edges`` and ``edges/3/queue`` but never ``edges9/queue`` — a trailing
+``#`` only ever swallows whole ``/``-separated segments, so a pattern like
+``edges#`` cannot prefix-match across the separator into a sibling
+namespace.
 """
 from __future__ import annotations
 
-import collections
 import fnmatch
-from typing import Any, Callable, DefaultDict, Dict, List, Tuple
+from typing import Any, Callable, Dict, List, Tuple
 
 Handler = Callable[[str, Any], None]
 
@@ -21,6 +27,19 @@ class Bus:
 
     def subscribe(self, pattern: str, handler: Handler) -> None:
         self._subs.append((pattern, handler))
+
+    def unsubscribe(self, pattern: str, handler: Handler) -> bool:
+        """Drop one (pattern, handler) subscription; True if it existed.
+
+        Safe to call from inside a handler mid-delivery: ``publish``
+        iterates a snapshot, so the in-flight delivery completes (the
+        leaving handler may still see the current publication) and every
+        later publish skips it."""
+        try:
+            self._subs.remove((pattern, handler))
+            return True
+        except ValueError:
+            return False
 
     def publish(self, topic: str, payload: Any, nbytes: int = 0) -> int:
         """Deliver to all matching subscribers; returns delivery count."""
@@ -36,7 +55,14 @@ class Bus:
 
 def _match(pattern: str, topic: str) -> bool:
     if pattern.endswith("#"):
-        return topic.startswith(pattern[:-1])
+        # MQTT semantics: '#' stands for "this segment and everything
+        # below it", so it must sit on a topic-segment boundary.  The
+        # prefix before it (sans its trailing '/') must equal the topic
+        # or be a whole-segment prefix of it: "edges/#" matches "edges"
+        # and "edges/3/q" but NOT "edges9/q".
+        prefix = pattern[:-1].rstrip("/")
+        return topic == prefix or topic.startswith(prefix + "/") \
+            if prefix else True
     return fnmatch.fnmatch(topic, pattern)
 
 

@@ -10,11 +10,24 @@ couldn't settle".
 Requests enter through the SurveilEdge triage: the edge CQ model scores
 each prompt, confident ones are answered at the edge (classification
 serving), the rest are admitted to the cloud decode batch.
+
+This module also hosts the **real-time driver** for the simulation
+pipeline (``repro.system.pipeline``): ``AsyncDriver`` pumps the same
+event heap the DES ``SimDriver`` drains, but from an asyncio loop
+against a pluggable ``Clock`` — ``VirtualClock`` (deterministic: pops in
+exactly the DES order, which the differential tests assert) or
+``WallClock`` (real time, optionally scaled).  ``call_at`` schedules
+host-side hooks (live query submission via ``repro.serving.api``) that
+run strictly before same-instant simulation events.
 """
 from __future__ import annotations
 
+import asyncio
+import collections
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Tuple
+import heapq
+import time
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -143,7 +156,10 @@ class CascadeServer:
         self.th = thresholds or ThresholdState(alpha=0.8, beta=0.1)
         self.engine = DecodeEngine(cloud_cfg, cloud_params, slots=slots,
                                    cache_len=cache_len)
-        self.queue: List[Request] = []
+        # deque: admission pops from the head every tick, and a long
+        # backlog under a full batch made list.pop(0) O(n) per admit —
+        # O(n^2) across a rush
+        self.queue: Deque[Request] = collections.deque()
         self.results: Dict[int, Request] = {}
 
         @jax.jit
@@ -180,7 +196,7 @@ class CascadeServer:
         ticks = 0
         while (self.queue or self.engine.active) and ticks < max_ticks:
             while self.queue and self.engine.admit(self.queue[0]):
-                self.queue.pop(0)
+                self.queue.popleft()
             for req in self.queue:
                 req.ticks_waited += 1
             if self.engine.active:
@@ -190,3 +206,114 @@ class CascadeServer:
                     self.results[rid] = req
             ticks += 1
         return self.results
+
+
+# --- real-time driver for the simulation pipeline -----------------------------
+#
+# ``QueryPipeline`` exposes a driver seam (setup / handle_event /
+# finalize); ``SimDriver`` (system/pipeline.py) drains the event heap at
+# zero wall-clock cost.  ``AsyncDriver`` pumps the SAME heap from asyncio
+# against a Clock, which is what turns the simulator into a serving
+# process: in wall time, events fire when their simulated instant
+# actually arrives; in virtual time, the clock just jumps — bit-identical
+# pops to SimDriver, so every control-plane feature can be tested
+# deterministically and then served unchanged.
+
+
+class VirtualClock:
+    """Deterministic clock: ``sleep_until`` jumps straight to ``t``.
+
+    The single ``asyncio.sleep(0)`` yield keeps the pump cooperative (a
+    co-scheduled submitter coroutine gets a turn per event) without ever
+    consulting real time."""
+
+    def __init__(self) -> None:
+        self._t = 0.0
+
+    def now(self) -> float:
+        return self._t
+
+    async def sleep_until(self, t: float) -> None:
+        if t > self._t:
+            self._t = t
+        await asyncio.sleep(0)
+
+
+class WallClock:
+    """Real time, scaled: ``speed`` simulated seconds pass per wall
+    second (speed=60 replays a minute of fleet per wall second)."""
+
+    def __init__(self, speed: float = 1.0) -> None:
+        if speed <= 0:
+            raise ValueError(f"speed={speed} must be > 0")
+        self.speed = speed
+        self._t0: Optional[float] = None
+
+    def _origin(self) -> float:
+        if self._t0 is None:
+            self._t0 = time.monotonic()
+        return self._t0
+
+    def now(self) -> float:
+        return (time.monotonic() - self._origin()) * self.speed
+
+    async def sleep_until(self, t: float) -> None:
+        delay = (t - self.now()) / self.speed
+        if delay > 0:
+            await asyncio.sleep(delay)
+
+
+class AsyncDriver:
+    """Pump a ``QueryPipeline``'s event heap from an asyncio loop.
+
+    ``call_at(t, fn)`` schedules a host hook at simulated time ``t`` —
+    the live-submission entry point (``QueryAPI.submit`` from a hook
+    pushes ``QueryArrival`` into the same heap).  Hooks run strictly
+    BEFORE simulation events at the same instant, so a submission at t
+    is admitted by the arrival it just pushed, never raced by it.
+
+    With no hooks, the pump peeks the heap, sleeps the clock to the
+    event's instant, and pops — exactly ``SimDriver``'s order (same
+    heap, same tie-breaking seq), which the differential tests assert
+    bit-identical.
+    """
+
+    def __init__(self, clock: Optional[object] = None) -> None:
+        self.clock = clock or VirtualClock()
+        self._hooks: List[Tuple[float, int, Callable[[float], Any]]] = []
+        self._hseq = 0
+        self.events_pumped = 0
+        self.hooks_run = 0
+
+    def call_at(self, t: float, fn: Callable[[float], Any]) -> None:
+        """Run ``fn(t)`` at simulated time ``t`` (FIFO among equal t)."""
+        self._hseq += 1
+        heapq.heappush(self._hooks, (t, self._hseq, fn))
+
+    def drive(self, pipe) -> None:
+        """Synchronous entry point for ``QueryPipeline.run``."""
+        asyncio.run(self.pump(pipe))
+
+    async def pump(self, pipe) -> None:
+        """The async loop proper — await this directly (e.g. gathered
+        with a live submitter coroutine) when the caller already owns an
+        event loop."""
+        while True:
+            ev_t = pipe.events.peek_time()
+            hook_t = self._hooks[0][0] if self._hooks else None
+            if ev_t is None and hook_t is None:
+                return
+            nxt = min(x for x in (ev_t, hook_t) if x is not None)
+            await self.clock.sleep_until(nxt)
+            # re-peek: a wall-clock sleep (or the virtual clock's yield)
+            # may have let a co-scheduled coroutine push earlier work
+            ev_t = pipe.events.peek_time()
+            hook_t = self._hooks[0][0] if self._hooks else None
+            if hook_t is not None and (ev_t is None or hook_t <= ev_t):
+                t, _, fn = heapq.heappop(self._hooks)
+                self.hooks_run += 1
+                fn(t)
+            elif ev_t is not None:
+                t, ev = pipe.events.pop()
+                self.events_pumped += 1
+                pipe.handle_event(t, ev)

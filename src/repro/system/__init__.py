@@ -11,11 +11,17 @@ fleet, the concept-drift ``drifting_city``, and the frames-in
 online recalibration loop) / ``frontend`` (confidence-stream or the
 pixel/CNN path in ``pixel_frontend``) behind a slim ``pipeline``
 orchestrator.
+
+The event loop itself is a pluggable driver: ``SimDriver`` (the DES
+default) or ``repro.serving.engine.AsyncDriver`` (asyncio, virtual or
+wall clock — the real-time serving mode, with ``repro.serving.api``'s
+query-submission/admission control plane and the ``rush_hour`` preset
+exercising it).
 """
 from repro.system.feedback import FeedbackStage, apply_calibration
 from repro.system.frontend import ConfidenceStreamFrontend, Frontend
 from repro.system.metrics import QueryReport, StreamingWindows
-from repro.system.pipeline import QueryPipeline, run_query
+from repro.system.pipeline import QueryPipeline, SimDriver, run_query
 from repro.system.pixel_frontend import PixelFrontend
 from repro.system.queries import DEFAULT_QUERY, QuerySet, QuerySpec
 from repro.system.scenario import (
@@ -32,6 +38,7 @@ from repro.system.scenario import (
     multi_query_city,
     pixel_city,
     query_churn,
+    rush_hour,
     scenario_cameras,
     single_edge,
     straggler_edge,
@@ -53,6 +60,7 @@ __all__ = [
     "SCENARIOS",
     "SCHEMES",
     "Scenario",
+    "SimDriver",
     "StreamingWindows",
     "SuperstepDriver",
     "apply_calibration",
@@ -67,6 +75,7 @@ __all__ = [
     "pixel_city",
     "query_churn",
     "run_query",
+    "rush_hour",
     "scenario_cameras",
     "single_edge",
     "straggler_edge",

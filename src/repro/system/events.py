@@ -193,6 +193,12 @@ class EventQueue:
             heapq.heappop(self._boundary)
         return t, event
 
+    def peek_time(self) -> Optional[float]:
+        """Earliest queued event time without popping (None when empty).
+        The async driver sleeps its clock to this instant before popping,
+        so virtual-time runs pop in exactly the DES order."""
+        return self._pq[0][0] if self._pq else None
+
     def next_boundary(self) -> float:
         """Earliest boundary-event time still queued (+inf if none)."""
         return self._boundary[0] if self._boundary else float("inf")

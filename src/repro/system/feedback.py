@@ -106,6 +106,15 @@ class FeedbackStage:
             (t, item.conf, item.is_query))
         self.labels_seen += 1
 
+    def add_query(self, query: int) -> None:
+        """Open label buffers for a runtime-submitted query (live API) so
+        its re-classification verdicts feed the fused fit like any
+        declared query's."""
+        for e in self.sc.edge_ids:
+            self.buffers.setdefault(
+                (query, e),
+                collections.deque(maxlen=self.sc.feedback_window))
+
     def retire_query(self, query: int) -> None:
         """A retired query's labels describe a model nobody serves anymore:
         clear its buffers so its rows never re-enter the fused fit."""

@@ -208,6 +208,22 @@ class QueryReport:
     # O(window) cells instead — city-of-cameras runs must not hold (or
     # sort) per-item arrays at report time
     stream: Optional[StreamingWindows] = None
+    # --- serving control plane (admission / tiers / alerts) -------------------
+    # alert kind -> count: the run's alerts/# bus traffic (quota, backlog,
+    # failover, shed_batch, queue_depth, threshold_drift), snapshotted
+    # from the AlertStream; empty when nothing alerted
+    alerts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    submitted_queries: int = 0             # QueryArrivals seen by admission
+    #                                        (0 when admission is off)
+    shed_queries: int = 0                  # submissions admission refused
+    shed_items: int = 0                    # stream items dropped because
+    #                                        their query was shed
+    # tier -> {n, mean_latency_s, p99_latency_s, slo_s, slo_breaches}:
+    # per-priority-tier latency cells (tiers declared only) — the
+    # priority-inversion evidence: tier 0 must hold its SLO while lower
+    # tiers queue and shed
+    tier_latency: Dict[int, Dict[str, float]] = \
+        dataclasses.field(default_factory=dict)
 
     @property
     def n_items(self) -> int:
@@ -388,7 +404,31 @@ class QueryReport:
                                  else (len(np.unique(self.query_ids))
                                        if len(self.query_ids) else 1))),
             "cloud_train_s": round(self.cloud_train_s, 3),
+            **self._control_plane_summary(),
         }
+
+    def _control_plane_summary(self) -> Dict[str, float]:
+        """Admission/tier/alert columns — only emitted when the control
+        plane actually ran (tiers declared or submissions seen), so
+        pre-control-plane rows keep their exact schema."""
+        out: Dict[str, float] = {}
+        if self.submitted_queries or self.alerts:
+            out["alerts_total"] = sum(self.alerts.values())
+        if self.submitted_queries:
+            out["submitted_queries"] = self.submitted_queries
+            out["shed_queries"] = self.shed_queries
+            out["shed_items"] = self.shed_items
+            out["shed_rate"] = round(
+                self.shed_queries / self.submitted_queries, 4)
+        if self.tier_latency:
+            top = min(self.tier_latency)
+            out["slo_breach_top_tier"] = \
+                self.tier_latency[top]["slo_breaches"]
+            for k, row in sorted(self.tier_latency.items()):
+                out[f"p99_latency_tier{k}"] = round(
+                    row["p99_latency_s"], 3)
+                out[f"slo_breach_tier{k}"] = row["slo_breaches"]
+        return out
 
 
 def merge_timelines(samples: List[Dict[int, int]]) -> Dict[int, np.ndarray]:

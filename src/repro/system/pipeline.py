@@ -33,6 +33,29 @@ Beyond-paper stress is first-class: scenarios may declare traffic bursts
 and mid-run edge failures (queued work is re-dispatched, the dead edge's
 cameras re-home to survivors via Eq. 7).  Entry point unchanged:
 ``run_query(scenario) -> QueryReport``.
+
+The event loop itself is a pluggable **driver** behind a three-method
+seam — ``setup(items)`` / ``handle_event(t, ev)`` / ``finalize()``:
+
+  SimDriver    (here)                  classic DES: drain the heap in
+                                       time order at zero wall-clock cost.
+                                       The default; every preset and the
+                                       superstep path run on it unchanged.
+  AsyncDriver  repro.serving.engine    the same heap pumped from an
+                                       asyncio loop against a ``Clock``
+                                       (virtual for deterministic tests —
+                                       bit-identical pops to SimDriver —
+                                       or wall for real-time serving),
+                                       with ``call_at`` hooks for live
+                                       query submission (serving/api.py).
+
+The serving control plane rides on the seam: per-tenant admission
+(token-bucket quotas + backlog shedding, ``repro.serving.api``), priority
+tiers woven into Eq. 7 as an SLO-pressure cost term, and an alert/health
+stream published on the Bus (``alerts/#`` — admission sheds, failovers,
+queue depth, threshold drift) that ``QueryReport`` snapshots.  All of it
+is opt-in per scenario; the tierless/quota-free defaults are
+bit-identical to the pre-control-plane engine.
 """
 from __future__ import annotations
 
@@ -42,6 +65,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.scheduler import CLOUD, Scheduler
+from repro.serving.alerts import AlertStream
+from repro.serving.api import AdmissionController
 from repro.serving.bus import Bus, ParamDB
 from repro.serving.simulator import Item
 from repro.system import metrics as MX
@@ -65,7 +90,7 @@ from repro.system.events import (
 from repro.system.feedback import FeedbackStage
 from repro.system.frontend import ConfidenceStreamFrontend, Frontend
 from repro.system.nodes import NodeBank
-from repro.system.queries import QuerySet
+from repro.system.queries import QuerySet, QuerySpec
 from repro.system.scenario import Scenario
 from repro.system.superstep import Ctrl, SuperstepDriver
 from repro.system.transport import Transport
@@ -103,11 +128,31 @@ def group_arrivals(items: Sequence[Item], interval_s: float
     return out
 
 
-class QueryPipeline:
-    """Event loop over one scenario.  Build once, ``run()`` once."""
+class SimDriver:
+    """Classic discrete-event driver: drain the heap in time order.
 
-    def __init__(self, sc: Scenario):
+    Zero wall-clock cost per event; the default for every preset and the
+    only driver the superstep path supports.  ``AsyncDriver``
+    (``repro.serving.engine``) pumps the same heap from an asyncio loop —
+    in virtual time it pops in exactly this order, which is what the
+    differential tests assert."""
+
+    def drive(self, pipe: "QueryPipeline") -> None:
+        while pipe.events:
+            t, ev = pipe.events.pop()
+            pipe.handle_event(t, ev)
+
+
+class QueryPipeline:
+    """Event loop over one scenario.  Build once, ``run()`` once.
+
+    ``driver`` plugs the event-loop strategy (default ``SimDriver``); any
+    driver calls the same ``setup`` / ``handle_event`` / ``finalize``
+    seam, so simulated and real-time runs share every handler."""
+
+    def __init__(self, sc: Scenario, driver: Optional[object] = None):
         self.sc = sc
+        self.driver = driver
         self.rng = np.random.default_rng(sc.seed + 1)
         # topology: cloud is node 0, edges 1..E (service-time multipliers)
         self.service_s: Dict[int, float] = {
@@ -127,6 +172,14 @@ class QueryPipeline:
             self.db.put(f"t{nid}", svc)
             self.db.put(f"Q{nid}", 0)
             self.sched.nodes[nid].estimator.t = svc
+        # control plane (all opt-in per scenario; absent -> bit-identical
+        # to the pre-control-plane engine): priority tiers feed the
+        # SLO-pressure Eq. 7 term and per-tier latency accounting; the
+        # alert stream snapshots every alerts/# publication for the report
+        self._tiers = {ts.tier: ts for ts in sc.tiers}
+        self._tier_of: Dict[int, int] = {
+            sp.query: sp.tier for sp in sc.queries}
+        self.alerts = AlertStream(self.bus)
 
     # --- event machinery ------------------------------------------------------
     def _enqueue(self, t: float, node: int, task: Task) -> None:
@@ -147,6 +200,15 @@ class QueryPipeline:
         # not the reconcile instant ``t`` — latency and window placement
         # follow what was served; accuracy follows the reconciled decision.
         ts = t if serve_t is None else serve_t
+        if self._tier_acc is not None:
+            # per-tier latency/accuracy cells + SLO breach counts (the
+            # control plane's acceptance signal: tier 0 must stay at zero
+            # breaches while lower tiers absorb the rush)
+            k = self._tier_of.get(it.query, 0)
+            lat = ts - it.t_arrival
+            self._tier_acc[k].add(lat, decision, it.is_query)
+            if lat > self._tiers[k].slo_s:
+                self._tier_breach[k] += 1
         if self._agg is not None:
             # streaming windowed aggregates (metrics_window_s): O(1) per
             # item, no per-item arrays held for the report
@@ -171,13 +233,25 @@ class QueryPipeline:
         if self.sc.scheme == "surveiledge_fixed":
             target = CLOUD          # local-edge-first: escalations go up
         else:
+            extra = {CLOUD: self.transport.wan_backlog(t)}
+            if self._tiers:
+                # priority tiers: a weighted tier's item adds SLO
+                # pressure to Eq. 7 — nodes that would blow its
+                # remaining slack are penalized in proportion (weight 0
+                # or no tiers leaves the argmin bit-identical)
+                tsp = self._tiers.get(
+                    self._tier_of.get(task.item.query, 0))
+                if tsp is not None and tsp.weight > 0.0:
+                    extra = self.sched.slo_pressure(
+                        tsp.weight,
+                        tsp.slo_s - (t - task.item.t_arrival), extra)
             try:
                 # edge_only has no cloud path: its failovers stay on the
                 # surviving edges (cloud only as a last resort below)
                 target = self.sched.select_node(
                     exclude_cloud=self.sc.scheme == "edge_only",
                     exclude={src} if exclude_src else (),
-                    extra_cost={CLOUD: self.transport.wan_backlog(t)})
+                    extra_cost=extra)
             except ValueError:
                 target = CLOUD      # the cloud never fails in our scenarios
         if count_escalated:
@@ -257,6 +331,9 @@ class QueryPipeline:
             if edge in self.nodes.dead:
                 # dead edge's cameras re-home: raw frames to survivors
                 for it in batch:
+                    if self.queries.is_shed(it.query):
+                        self._shed_items += 1
+                        continue
                     self._rerouted += 1
                     self._dispatch(t, edge, self._failover_task(it),
                                    count_escalated=False)
@@ -277,7 +354,11 @@ class QueryPipeline:
         ready: Dict[Tuple[int, int], List[Item]] = {}
         for edge, batch in live.items():
             for it in batch:
-                if self.queries.live_on(it.query, edge):
+                if self.queries.is_shed(it.query):
+                    # admission refused this query: its detections drop
+                    # (counted), they never defer and never triage
+                    self._shed_items += 1
+                elif self.queries.live_on(it.query, edge):
                     ready.setdefault((it.query, edge), []).append(it)
                 elif self.queries.is_retired(it.query):
                     # straggler of a retired query: the edge answers with
@@ -310,7 +391,11 @@ class QueryPipeline:
                     self.db.put(f"beta{tag}", b)
                 for key in [k for k in ready
                             if k[1] in self._ctrl.overloaded]:
-                    for it in ready.pop(key):
+                    shed = ready.pop(key)
+                    self.bus.publish(
+                        f"alerts/edge{key[1]}/shed_batch",
+                        dict(t=t, query=key[0], items=len(shed)))
+                    for it in shed:
                         self._rerouted += 1
                         self._dispatch(t, key[1],
                                        Task(it, "reclassify", None),
@@ -333,12 +418,18 @@ class QueryPipeline:
                               if self.sched.nodes[e].drain_time
                               > self.sc.offload_drain_s}
                 for key in [k for k in ready if k[1] in overloaded]:
-                    for it in ready.pop(key):
+                    shed = ready.pop(key)
+                    self.bus.publish(
+                        f"alerts/edge{key[1]}/shed_batch",
+                        dict(t=t, query=key[0], items=len(shed)))
+                    for it in shed:
                         self._rerouted += 1
                         self._dispatch(t, key[1],
                                        Task(it, "reclassify", None),
                                        count_escalated=False,
                                        exclude_src=True)
+                if self.sc.alert_threshold_drift is not None:
+                    self._check_drift(t, ready)
             if not ready:
                 return
             outs = self.triage_stage.triage_tick(ready)
@@ -367,6 +458,25 @@ class QueryPipeline:
                     task.provisional = bool(cal > 0.5)
                 self._enqueue(t, edge, task)
 
+    def _check_drift(self, t: float,
+                     ready: Dict[Tuple[int, int], List[Item]]) -> None:
+        """Alert (once per (query, edge) row, latched) when Eqs. 8-9 have
+        walked a row's (alpha, beta) further than ``alert_threshold_drift``
+        from the scheme prototype — the health signal an operator watches
+        to spot a bracket collapsing shut under sustained load."""
+        a0, b0 = self._base_th
+        for key in ready:
+            if key in self._drift_alerted:
+                continue
+            st = self.triage_stage.states[key]
+            if abs(st.alpha - a0) + abs(st.beta - b0) \
+                    > self.sc.alert_threshold_drift:
+                self._drift_alerted.add(key)
+                self.bus.publish(
+                    f"alerts/edge{key[1]}/threshold_drift",
+                    dict(t=t, query=key[0], alpha=round(st.alpha, 4),
+                         beta=round(st.beta, 4)))
+
     def _failover_task(self, it: Item, prior: Optional[Task] = None) -> Task:
         """A dead edge's work re-homed to a survivor: under edge_only the
         peer re-runs the CQ model (conf > 0.5); otherwise the heavyweight
@@ -388,6 +498,8 @@ class QueryPipeline:
         stranded = self.nodes.fail(t, node)
         self.sched.nodes[node].queue_len = 0
         self.db.put(f"Q{node}", 0)
+        self.bus.publish(f"alerts/edge{node}/failover",
+                         dict(t=t, stranded=len(stranded)))
         for task in stranded:
             self._rerouted += 1
             self._dispatch(t, node, self._failover_task(task.item, task),
@@ -458,11 +570,13 @@ class QueryPipeline:
         if self.nodes.queues[node]:
             self._start_service(t, node)
 
-    # --- main loop ------------------------------------------------------------
-    def run(self, items: Sequence[Item],
-            frontend_timings: Optional[Dict[str, float]] = None
-            ) -> MX.QueryReport:
+    # --- driver seam: setup -> handle_event* -> finalize ----------------------
+    def setup(self, items: Sequence[Item],
+              frontend_timings: Optional[Dict[str, float]] = None) -> None:
+        """Build run state and seed the event queue (pops no events —
+        that is the driver's job)."""
         sc = self.sc
+        self._frontend_timings = frontend_timings
         self.events = EventQueue()
         self.transport = Transport(sc)
         self.nodes = NodeBank(sc, self.service_s, self.rng)
@@ -489,7 +603,27 @@ class QueryPipeline:
         self._release: Dict[int, List[Item]] = {}
         self._deferred_count: Dict[int, int] = {}
         self._train_total = 0.0
-        tick_samples: List[Dict[int, int]] = []
+        # admission control (token-bucket tenant quotas + fine-tune
+        # backlog shedding): with it on, Fig. 5 fine-tunes SERIALIZE on
+        # the cloud (``_train_free_at`` is when it frees up), so a
+        # submission wave builds exactly the backlog the controller sheds
+        # on.  Off (the default), training stays concurrent —
+        # bit-identical to the pre-control-plane engine.
+        self.admission = AdmissionController(
+            sc.tenants, sc.admission_backlog_s) \
+            if (sc.tenants or sc.admission_backlog_s is not None) else None
+        self._train_free_at = 0.0
+        self._submitted = 0
+        self._shed_queries = 0
+        self._shed_items = 0
+        # per-tier latency cells + SLO breach counts (tiers declared only)
+        self._tier_acc = {k: MX._Acc() for k in self._tiers} \
+            if self._tiers else None
+        self._tier_breach = {k: 0 for k in self._tiers}
+        self._drift_alerted: set = set()
+        self._base_th = (self.triage_stage._proto.alpha,
+                        self.triage_stage._proto.beta)
+        self._tick_samples: List[Dict[int, int]] = []
         # streaming windowed aggregates (metrics_window_s): the per-item
         # report arrays stay empty and _finish folds into O(window) cells
         self._agg = MX.StreamingWindows(sc.metrics_window_s) \
@@ -517,7 +651,7 @@ class QueryPipeline:
         # batch each tick's detections into ONE TickArrivals event (the
         # cascade schemes triage it with a single fused fleet launch)
         last_t = max((it.t_arrival for it in items), default=0.0)
-        n_ticks = max(1, int(math.ceil(
+        n_ticks = self._n_ticks = max(1, int(math.ceil(
             max(sc.duration_s, last_t + 1e-9) / sc.interval_s)))
         if sc.scheme == "cloud_only":
             for it in items:
@@ -547,107 +681,166 @@ class QueryPipeline:
                 self.events.push(k * sc.update_period_s, FeedbackTick())
                 k += 1
 
-        while self.events:
-            t, ev = self.events.pop()
-            if isinstance(ev, BOUNDARY_EVENTS):
-                # boundary events mutate state the fused superstep math
-                # reads: the boundary-held control signals resample at
-                # the next triaged tick (and plans never span this pop —
-                # the planner stopped strictly before it)
-                self._ctrl_dirty = True
-            if isinstance(ev, Sample):
-                tick_samples.append({
-                    n: self.nodes.occupancy(n) for n in self.service_s})
-            elif isinstance(ev, Arrive):         # cloud_only
-                it = ev.item
-                task = Task(it, "reclassify", None)
-                done = self.transport.wan_send(t, it.nbytes)
-                task.tx_s = done - t
-                self.events.push(done, Transfer(CLOUD, task))
-            elif isinstance(ev, TickArrivals):
-                self._on_tick(t, ev.batches, ev.tick)
-            elif isinstance(ev, Transfer):
-                if ev.node in self.nodes.dead:   # died while in transit
-                    self._rerouted += 1
-                    self._dispatch(t, ev.node, ev.task,
-                                   count_escalated=False)
-                else:
-                    self._enqueue(t, ev.node, ev.task)
-            elif isinstance(ev, EdgeFail):
-                if ev.node not in self.nodes.dead:
-                    self._fail_node(t, ev.node)
-            elif isinstance(ev, QueryArrival):
-                # charge the Fig. 5 fine-tune on the cloud; this query's
-                # detections defer (its escalations are blocked) until its
-                # weights deliver per edge
-                dt = self.queries.arrive(ev.query, t)
-                self.nodes.busy_s[CLOUD] += dt
-                self._train_total += dt
-                self.events.push(t + dt, TrainDone(ev.query))
-            elif isinstance(ev, TrainDone):
-                if not self.queries.is_retired(ev.query):
-                    # ship the fresh CQ weights to every live edge over the
-                    # shared WAN downlink (FIFO: a fleet-wide push
-                    # serializes, so edges go live staggered)
-                    for e in sorted(self.sc.edge_ids):
-                        if e in self.nodes.dead:
-                            continue
-                        # weights ship through the quantized wire path
-                        # (simulated model: byte accounting only — the
-                        # accuracy cost of int8 CQ weights is measured by
-                        # the report gate's F2 band, not re-simulated)
-                        done, _ = self.transport.ship_update(
-                            t, self.sc.cq_nbytes)
-                        self.events.push(done, ModelUpdate(
-                            e, None, query=ev.query, kind="weights"))
-            elif isinstance(ev, QueryRetire):
-                self.queries.retire(ev.query)
-                self.triage_stage.retire_query(ev.query)
-                self.feedback.retire_query(ev.query)
-                # stragglers still waiting for weights are answered with
-                # the pre-trained prior; in-flight escalations complete
-                # normally and are still counted
-                for key in [k for k in self._deferred if k[0] == ev.query]:
-                    q, e = key
-                    for it in self._deferred.pop(key):
-                        self._enqueue(t, e, Task(it, "classify",
-                                                 it.conf > 0.5))
-            elif isinstance(ev, ReleaseTick):
-                # only fires a launch if this tick boundary had no natural
-                # TickArrivals (which would have absorbed the release)
-                if self._release:
-                    self._on_tick(t, {}, ev.tick)
-            elif isinstance(ev, FeedbackTick):
-                # one fused fleet recalibration launch; the per-row
-                # results land as ModelUpdate events at downlink delivery
-                for done, update in self.feedback.tick(
-                        t, self.nodes.dead, self.queries.retired):
-                    self.events.push(done, update)
-            elif isinstance(ev, ModelUpdate):
-                if ev.kind == "weights":
-                    if ev.edge in self.nodes.dead \
-                            or self.queries.is_retired(ev.query):
+    def handle_event(self, t: float, ev: object) -> None:
+        """Apply ONE event.  Drivers own the loop (SimDriver drains the
+        heap; AsyncDriver pumps it from asyncio); this owns the physics —
+        every driver funnels through here, which is what makes the
+        sim-vs-async differential tests meaningful."""
+        sc = self.sc
+        if isinstance(ev, BOUNDARY_EVENTS):
+            # boundary events mutate state the fused superstep math
+            # reads: the boundary-held control signals resample at
+            # the next triaged tick (and plans never span this pop —
+            # the planner stopped strictly before it)
+            self._ctrl_dirty = True
+        if isinstance(ev, Sample):
+            self._tick_samples.append({
+                n: self.nodes.occupancy(n) for n in self.service_s})
+            if sc.alert_queue_depth is not None:
+                for e in sc.edge_ids:
+                    if e in self.nodes.dead:
                         continue
-                    self.queries.activate(ev.query, ev.edge)
-                    pend = self._deferred.pop((ev.query, ev.edge), None)
-                    if pend:
-                        self._release.setdefault(ev.edge, []).extend(pend)
-                        self.events.push(
-                            (math.floor(t / sc.interval_s) + 1)
-                            * sc.interval_s,
-                            ReleaseTick(int(math.floor(t / sc.interval_s))))
-                elif ev.edge not in self.nodes.dead \
-                        and not self.queries.is_retired(ev.query):
-                    # a calibration that retired mid-flight must not undo
-                    # retire_query's reset
-                    self.triage_stage.apply_update(ev.query, ev.edge,
-                                                   ev.params)
+                    occ = self.nodes.occupancy(e)
+                    if occ > sc.alert_queue_depth:
+                        self.bus.publish(f"alerts/edge{e}/queue_depth",
+                                         dict(t=t, depth=occ))
+        elif isinstance(ev, Arrive):         # cloud_only
+            it = ev.item
+            task = Task(it, "reclassify", None)
+            done = self.transport.wan_send(t, it.nbytes)
+            task.tx_s = done - t
+            self.events.push(done, Transfer(CLOUD, task))
+        elif isinstance(ev, TickArrivals):
+            self._on_tick(t, ev.batches, ev.tick)
+        elif isinstance(ev, Transfer):
+            if ev.node in self.nodes.dead:   # died while in transit
+                self._rerouted += 1
+                self._dispatch(t, ev.node, ev.task,
+                               count_escalated=False)
             else:
-                assert isinstance(ev, ServiceDone), ev
-                self._on_done(t, ev.node, ev.task, ev.service_s)
+                self._enqueue(t, ev.node, ev.task)
+        elif isinstance(ev, EdgeFail):
+            if ev.node not in self.nodes.dead:
+                self._fail_node(t, ev.node)
+        elif isinstance(ev, QueryArrival):
+            self._on_query_arrival(t, ev.query)
+        elif isinstance(ev, TrainDone):
+            if not self.queries.is_retired(ev.query):
+                # ship the fresh CQ weights to every live edge over the
+                # shared WAN downlink (FIFO: a fleet-wide push
+                # serializes, so edges go live staggered)
+                for e in sorted(self.sc.edge_ids):
+                    if e in self.nodes.dead:
+                        continue
+                    # weights ship through the quantized wire path
+                    # (simulated model: byte accounting only — the
+                    # accuracy cost of int8 CQ weights is measured by
+                    # the report gate's F2 band, not re-simulated)
+                    done, _ = self.transport.ship_update(
+                        t, self.sc.cq_nbytes)
+                    self.events.push(done, ModelUpdate(
+                        e, None, query=ev.query, kind="weights"))
+        elif isinstance(ev, QueryRetire):
+            self.queries.retire(ev.query)
+            self.triage_stage.retire_query(ev.query)
+            self.feedback.retire_query(ev.query)
+            # stragglers still waiting for weights are answered with
+            # the pre-trained prior; in-flight escalations complete
+            # normally and are still counted
+            for key in [k for k in self._deferred if k[0] == ev.query]:
+                q, e = key
+                for it in self._deferred.pop(key):
+                    self._enqueue(t, e, Task(it, "classify",
+                                             it.conf > 0.5))
+        elif isinstance(ev, ReleaseTick):
+            # only fires a launch if this tick boundary had no natural
+            # TickArrivals (which would have absorbed the release)
+            if self._release:
+                self._on_tick(t, {}, ev.tick)
+        elif isinstance(ev, FeedbackTick):
+            # one fused fleet recalibration launch; the per-row
+            # results land as ModelUpdate events at downlink delivery
+            for done, update in self.feedback.tick(
+                    t, self.nodes.dead, self.queries.retired):
+                self.events.push(done, update)
+        elif isinstance(ev, ModelUpdate):
+            if ev.kind == "weights":
+                if ev.edge in self.nodes.dead \
+                        or self.queries.is_retired(ev.query):
+                    return
+                self.queries.activate(ev.query, ev.edge)
+                pend = self._deferred.pop((ev.query, ev.edge), None)
+                if pend:
+                    self._release.setdefault(ev.edge, []).extend(pend)
+                    self.events.push(
+                        (math.floor(t / sc.interval_s) + 1)
+                        * sc.interval_s,
+                        ReleaseTick(int(math.floor(t / sc.interval_s))))
+            elif ev.edge not in self.nodes.dead \
+                    and not self.queries.is_retired(ev.query):
+                # a calibration that retired mid-flight must not undo
+                # retire_query's reset
+                self.triage_stage.apply_update(ev.query, ev.edge,
+                                               ev.params)
+        else:
+            assert isinstance(ev, ServiceDone), ev
+            self._on_done(t, ev.node, ev.task, ev.service_s)
 
+    def _on_query_arrival(self, t: float, query: int) -> None:
+        """A query submission reaches the cloud.
+
+        Without admission (the default): the Fig. 5 fine-tune is charged
+        immediately and concurrently — bit-identical to the
+        pre-control-plane engine.  With admission: the submission first
+        passes its tenant's token bucket, then the fine-tune-backlog gate
+        (tier-scaled allowance; tier 0 exempt) — a refusal sheds the query
+        (its stream items drop, counted) and publishes an
+        ``alerts/admission/<reason>`` event; an accepted query's fine-tune
+        QUEUES behind the cloud's in-flight ones."""
+        sp = self.queries.specs[query]
+        if self.admission is not None:
+            self._submitted += 1
+            backlog = max(0.0, self._train_free_at - t)
+            reason = self.admission.admit(t, sp.tenant, sp.tier, backlog)
+            if reason is not None:
+                self.queries.shed_query(query)
+                self._shed_queries += 1
+                self.bus.publish(
+                    f"alerts/admission/{reason}",
+                    dict(t=t, query=query, tenant=sp.tenant, tier=sp.tier,
+                         backlog_s=round(backlog, 3)))
+                return
+            start = max(t, self._train_free_at)
+            dt = self.queries.arrive(query, start)
+            self.nodes.busy_s[CLOUD] += dt
+            self._train_total += dt
+            self._train_free_at = start + dt
+            self.events.push(start + dt, TrainDone(query))
+            return
+        # charge the Fig. 5 fine-tune on the cloud; this query's
+        # detections defer (its escalations are blocked) until its
+        # weights deliver per edge
+        dt = self.queries.arrive(query, t)
+        self.nodes.busy_s[CLOUD] += dt
+        self._train_total += dt
+        self.events.push(t + dt, TrainDone(query))
+
+    def register_query(self, sp: QuerySpec) -> None:
+        """Admit a runtime-submitted query into every stage's state
+        (serving/api.py's ``QueryAPI.submit`` calls this, then pushes the
+        ``QueryArrival`` event that starts the lifecycle)."""
+        self.queries.register(sp)
+        self._tier_of[sp.query] = sp.tier
+        tsp = self._tiers.get(sp.tier)
+        self.triage_stage.add_query(sp.query,
+                                    tsp.weight if tsp is not None else 0.0)
+        self.feedback.add_query(sp.query)
+
+    def finalize(self) -> MX.QueryReport:
+        """Assemble the QueryReport once the driver has drained the run."""
+        sc = self.sc
         qinfo: Dict[int, Dict] = {}
-        if sc.queries:
+        if sc.queries or len(self.queries.specs) > 1:
             by_query = self.triage_stage.thresholds_by_query()
             for q, sp in sorted(self.queries.specs.items()):
                 qinfo[q] = {
@@ -662,6 +855,17 @@ class QueryPipeline:
                                    sorted(by_query.get(q, {}).items())}
                     if sc.scheme in ("surveiledge", "surveiledge_fixed")
                     else {},
+                }
+        tier_rows: Dict[int, Dict[str, float]] = {}
+        if self._tier_acc is not None:
+            for k in sorted(self._tier_acc):
+                acc = self._tier_acc[k]
+                tier_rows[k] = {
+                    "n": acc.n,
+                    "mean_latency_s": acc.mean,
+                    "p99_latency_s": acc.percentile(0.99),
+                    "slo_s": self._tiers[k].slo_s,
+                    "slo_breaches": self._tier_breach[k],
                 }
         return MX.QueryReport(
             scenario=sc.name,
@@ -690,20 +894,34 @@ class QueryPipeline:
             supersteps=self.superstep.supersteps,
             triaged_ticks=self._triaged_ticks,
             stream=self._agg,
-            ticks=n_ticks,
-            queue_timeline=MX.merge_timelines(tick_samples),
+            ticks=self._n_ticks,
+            queue_timeline=MX.merge_timelines(self._tick_samples),
             per_node_busy=dict(self.nodes.busy_s),
             per_node_served=dict(self.nodes.served),
             thresholds=self.triage_stage.final_thresholds()
             if sc.scheme in ("surveiledge", "surveiledge_fixed") else {},
-            stage_timings={**(frontend_timings or {}),
+            stage_timings={**(self._frontend_timings or {}),
                            "triage_s": self.triage_stage.elapsed_s},
+            alerts=self.alerts.snapshot(),
+            submitted_queries=self._submitted,
+            shed_queries=self._shed_queries,
+            shed_items=self._shed_items,
+            tier_latency=tier_rows,
         )
+
+    def run(self, items: Sequence[Item],
+            frontend_timings: Optional[Dict[str, float]] = None
+            ) -> MX.QueryReport:
+        """setup -> drive (the injected driver, or SimDriver) -> finalize."""
+        self.setup(items, frontend_timings)
+        (self.driver or SimDriver()).drive(self)
+        return self.finalize()
 
 
 def run_query(scenario: Scenario,
               items: Optional[Sequence[Item]] = None,
-              frontend: Optional[Frontend] = None) -> MX.QueryReport:
+              frontend: Optional[Frontend] = None,
+              driver: Optional[object] = None) -> MX.QueryReport:
     """Run one query scenario end to end and return its ``QueryReport``.
 
     The detection stream comes from ``frontend`` (any ``Frontend``
@@ -716,6 +934,11 @@ def run_query(scenario: Scenario,
     run the paper's full pixel path instead: rendered frames -> Pallas
     framediff/morphology -> motion crops -> CQ-classifier confidences,
     with per-stage wall-clock in ``QueryReport.stage_timings``.
+
+    ``driver`` selects the event-loop strategy: None/``SimDriver`` for the
+    classic DES, or ``repro.serving.engine.AsyncDriver`` to pump the same
+    events from asyncio (virtual or wall clock) — the real-time serving
+    mode with live query submission (``repro.serving.api.QueryAPI``).
     """
     if frontend is not None and items is not None:
         raise ValueError("pass either items= or frontend=, not both "
@@ -724,5 +947,5 @@ def run_query(scenario: Scenario,
         frontend = ConfidenceStreamFrontend(
             items if items is not None else scenario.items)
     stream = frontend.stream(scenario)
-    return QueryPipeline(scenario).run(
+    return QueryPipeline(scenario, driver=driver).run(
         stream, frontend_timings=frontend.timings)

@@ -47,15 +47,25 @@ class QuerySpec:
     confidence sharpness (``scenario._SCHEME_BETAS``) — No-Fine-tune ships
     instantly but scores blurrier, All-Fine-tune scores sharpest but
     trains ~num_cameras-x longer.  ``t_retire_s=None`` means the query
-    lives to the end of the run."""
+    lives to the end of the run.
+
+    ``tenant`` / ``tier`` are the control-plane coordinates (admission
+    quotas and priority, ``repro.serving.api``): both default to the
+    tierless/quota-free engine, which keeps every pre-control-plane
+    scenario bit-identical."""
     query: int
     t_arrive_s: float = 0.0
     t_retire_s: Optional[float] = None
     train_scheme: str = "surveiledge"
+    tenant: str = ""
+    tier: int = 0
 
     def __post_init__(self):
         if self.query < 0:
             raise ValueError(f"query id {self.query} must be >= 0")
+        if self.tier < 0:
+            raise ValueError(
+                f"query {self.query}: tier={self.tier} must be >= 0")
         if self.t_arrive_s < 0:
             raise ValueError(
                 f"query {self.query}: t_arrive_s={self.t_arrive_s} < 0")
@@ -89,13 +99,25 @@ class QuerySet:
             "surveiledge", "surveiledge_fixed")
         self._num_cameras = sc.num_cameras
         self._step_s = sc.train_step_s
+        self._edge_ids = tuple(sc.edge_ids)
         self.live_edges: Dict[int, Set[int]] = {q: set() for q in self.specs}
         self.retired: Set[int] = set()
+        self.shed: Set[int] = set()
         self.train_s: Dict[int, float] = {}
         self.train_window: Dict[int, Tuple[float, float]] = {}
         if not self.lifecycle:
             for q in self.specs:
                 self.live_edges[q] = set(sc.edge_ids)
+
+    def register(self, sp: QuerySpec) -> None:
+        """Add a query at runtime (live API submission): it starts in the
+        pending state and rides the same arrival -> train -> ship -> serve
+        lifecycle as a scenario-declared query."""
+        if sp.query in self.specs:
+            raise ValueError(f"query {sp.query} already registered")
+        self.specs[sp.query] = sp
+        self.live_edges[sp.query] = set() if self.lifecycle \
+            else set(self._edge_ids)
 
     # --- lifecycle transitions ------------------------------------------------
     def arrive(self, query: int, t: float) -> float:
@@ -115,6 +137,11 @@ class QuerySet:
     def retire(self, query: int) -> None:
         self.retired.add(query)
 
+    def shed_query(self, query: int) -> None:
+        """Admission refused the query: it never trains, never ships, and
+        its stream items are dropped (counted) instead of answered."""
+        self.shed.add(query)
+
     # --- predicates -----------------------------------------------------------
     def live_on(self, query: int, edge: int) -> bool:
         """Can ``edge`` triage this query's detections right now?"""
@@ -123,6 +150,9 @@ class QuerySet:
 
     def is_retired(self, query: int) -> bool:
         return query in self.retired
+
+    def is_shed(self, query: int) -> bool:
+        return query in self.shed
 
     def training_at(self, query: int, t: float) -> bool:
         """Is the cloud inside this query's Fig. 5 fine-tune at ``t``?"""

@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.data import synthetic_video as SV
 from repro.kernels.buckets import validate_fleet_dims, validate_frame_hw
+from repro.serving.api import TenantSpec, TierSpec
 from repro.serving.simulator import Item
 from repro.system.queries import QuerySpec
 
@@ -97,6 +98,27 @@ class Scenario:
     train_step_s: float = 0.05               # cloud seconds per fine-tune step
     #                                          (Fig. 5 cost model's knob)
     cq_nbytes: int = 4 * 1024 * 1024         # per-edge CQ weight shipment
+    # --- control plane (serving layer: admission, priority, alerting) ---------
+    # Priority tiers: each QuerySpec.tier indexes this tuple; a tier's SLO
+    # and pressure weight thread into the Eq. 7 allocator and the Eqs. 8-9
+    # bracket updates (repro.serving.api.TierSpec).  Empty keeps the
+    # tierless engine bit-identical.
+    tiers: Tuple[TierSpec, ...] = ()
+    # Per-tenant submission quotas (token bucket; repro.serving.api).
+    tenants: Tuple[TenantSpec, ...] = ()
+    # Enables admission control at QueryArrival: fine-tunes SERIALIZE on
+    # the cloud (one training run at a time — the realistic regime where a
+    # backlog can exist at all) and submissions shed on quota exhaustion
+    # or when the training backlog exceeds the tier's allowance (tier 0
+    # exempt; tier k's allowance is this * 0.5**(k-1)).  None keeps the
+    # legacy concurrent-training path bit-identical.
+    admission_backlog_s: Optional[float] = None
+    # health alerting lines (None disables each alert kind): a sampled
+    # edge queue depth above alert_queue_depth, or an Eqs. 8-9 bracket
+    # drifted more than alert_threshold_drift (L1 on (alpha, beta)) from
+    # its starting point, publishes on alerts/edge<e>/...
+    alert_queue_depth: Optional[int] = None
+    alert_threshold_drift: Optional[float] = None
     # --- bandwidth endgame ----------------------------------------------------
     # ship every WAN-downlink model artifact (per-query CQ weights, Platt
     # calibration heads) int8-quantized (distributed/quantize.py wire
@@ -199,6 +221,61 @@ class Scenario:
             raise ValueError(
                 f"scenario {self.name!r}: superstep={self.superstep} must "
                 f"be >= 1 (or None for the legacy per-tick loop)")
+        # --- control plane ----------------------------------------------------
+        if self.tiers:
+            declared = sorted(ts.tier for ts in self.tiers)
+            if declared != list(range(len(self.tiers))):
+                raise ValueError(
+                    f"scenario {self.name!r}: tiers must declare contiguous "
+                    f"tier ids 0..{len(self.tiers) - 1}, got {declared}")
+        max_tier = len(self.tiers) - 1 if self.tiers else 0
+        tenant_names = {tn.tenant for tn in self.tenants}
+        if len(tenant_names) != len(self.tenants):
+            raise ValueError(
+                f"scenario {self.name!r}: duplicate tenant names in "
+                f"tenants={[tn.tenant for tn in self.tenants]}")
+        for sp in self.queries:
+            if sp.tier > max_tier:
+                raise ValueError(
+                    f"scenario {self.name!r}: query {sp.query} declares "
+                    f"tier={sp.tier} but only tiers 0..{max_tier} exist "
+                    f"(declare Scenario.tiers)")
+            if sp.tenant and self.tenants and sp.tenant not in tenant_names:
+                raise ValueError(
+                    f"scenario {self.name!r}: query {sp.query} declares "
+                    f"tenant={sp.tenant!r}, not one of "
+                    f"{sorted(tenant_names)}")
+        if self.admission_backlog_s is not None \
+                and self.admission_backlog_s <= 0:
+            raise ValueError(
+                f"scenario {self.name!r}: admission_backlog_s="
+                f"{self.admission_backlog_s} must be positive (or None)")
+        if self.alert_queue_depth is not None and self.alert_queue_depth < 1:
+            raise ValueError(
+                f"scenario {self.name!r}: alert_queue_depth="
+                f"{self.alert_queue_depth} must be >= 1 (or None)")
+        if self.alert_threshold_drift is not None \
+                and self.alert_threshold_drift <= 0:
+            raise ValueError(
+                f"scenario {self.name!r}: alert_threshold_drift="
+                f"{self.alert_threshold_drift} must be positive (or None)")
+        # the admission path (serialized fine-tunes, shed queries) and
+        # nonzero tier weights both feed per-tick live signals the fused
+        # scan cannot reproduce — the control plane requires the per-tick
+        # driver, exactly like the feedback loop requires deliveries to
+        # land at tick boundaries
+        if self.superstep is not None:
+            if self.admission_backlog_s is not None:
+                raise ValueError(
+                    f"scenario {self.name!r}: admission control "
+                    f"(admission_backlog_s) requires superstep=None — "
+                    f"shed/serialization decisions are per-arrival live "
+                    f"signals the scan path does not model")
+            if any(ts.weight > 0 for ts in self.tiers):
+                raise ValueError(
+                    f"scenario {self.name!r}: tier weights > 0 require "
+                    f"superstep=None — SLO pressure is a per-item live "
+                    f"signal the scan path does not model")
         if self.metrics_window_s is not None and self.metrics_window_s <= 0:
             raise ValueError(
                 f"scenario {self.name!r}: metrics_window_s="
@@ -589,6 +666,75 @@ def query_churn(num_cameras: int = 10, num_edges: int = 3, **kw) -> Scenario:
                     update_period_s=kw.pop("update_period_s", None), **kw)
 
 
+def rush_hour(num_cameras: int = 8, num_edges: int = 3, **kw) -> Scenario:
+    """The serving control plane's acceptance workload: query submissions
+    outpace the cloud's fine-tune throughput.
+
+    With admission enabled (``admission_backlog_s``), fine-tunes SERIALIZE
+    on the cloud, so a morning flood of submissions builds a training
+    backlog.  The query book is three tenants across three priority tiers:
+
+      tier 0 (``metro-pd``) — two queries onboarded in the opening act,
+        before the backlog exists; backlog-exempt, highest Eq. 7 SLO
+        weight.  The acceptance gate demands ZERO SLO breaches here.
+      tier 1 (``retail``)   — four queries submitted as the rush begins;
+        they tolerate the full backlog allowance, so the earliest ones
+        train (late, with visible head-of-query latency) and the last one
+        sheds once the backlog passes the tier-1 line.
+      tier 2 (``hobby``)    — six best-effort queries flooding in on a
+        starvation-rate token bucket: the first burns the only token and
+        sheds on backlog (its allowance is HALF tier 1's), the rest shed
+        on quota — overload sheds bottom-up, never by arrival order.
+
+    One edge dies mid-rush (failover alerts on top of the admission
+    alerts).  Everything is duration-relative so the smoke-sized run
+    keeps the same shed/priority story as the full-length one."""
+    duration = kw.pop("duration_s", 60.0)
+    d = duration
+    queries = kw.pop("queries", (
+        QuerySpec(0, 0.0, None, "surveiledge", tenant="metro-pd", tier=0),
+        QuerySpec(1, d * 0.04, None, "surveiledge",
+                  tenant="metro-pd", tier=0),
+        QuerySpec(2, d * 0.20, None, "surveiledge", tenant="retail", tier=1),
+        QuerySpec(3, d * 0.24, None, "surveiledge", tenant="retail", tier=1),
+        QuerySpec(4, d * 0.28, None, "surveiledge", tenant="retail", tier=1),
+        QuerySpec(5, d * 0.32, None, "surveiledge", tenant="retail", tier=1),
+        QuerySpec(6, d * 0.22, None, "surveiledge", tenant="hobby", tier=2),
+        QuerySpec(7, d * 0.26, None, "surveiledge", tenant="hobby", tier=2),
+        QuerySpec(8, d * 0.30, None, "surveiledge", tenant="hobby", tier=2),
+        QuerySpec(9, d * 0.34, None, "surveiledge", tenant="hobby", tier=2),
+        QuerySpec(10, d * 0.38, None, "surveiledge", tenant="hobby", tier=2),
+        QuerySpec(11, d * 0.42, None, "surveiledge", tenant="hobby",
+                  tier=2)))
+    speeds = tuple(1.0 if i % 2 == 0 else 0.5 for i in range(num_edges))
+    return Scenario(
+        name="rush_hour", edge_speeds=speeds,
+        num_cameras=num_cameras, duration_s=duration, queries=queries,
+        tiers=kw.pop("tiers", (
+            TierSpec(0, "platinum", slo_s=d * 0.25, weight=3.0),
+            TierSpec(1, "standard", slo_s=d * 0.15, weight=0.5),
+            TierSpec(2, "besteffort", slo_s=d * 0.15, weight=0.0))),
+        tenants=kw.pop("tenants", (
+            TenantSpec("metro-pd", rate=1.0, burst=2),
+            TenantSpec("retail", rate=0.5, burst=2),
+            TenantSpec("hobby", rate=1.0 / duration, burst=1))),
+        # each surveiledge fine-tune costs 0.1*duration of cloud time, so
+        # the tier-1/2 submission wave (one every 0.02-0.04*duration)
+        # outruns training ~3x — the backlog the admission gate sheds on
+        admission_backlog_s=kw.pop("admission_backlog_s", d * 0.15),
+        train_step_s=kw.pop("train_step_s", duration / 400.0),
+        cq_nbytes=kw.pop("cq_nbytes", 512 * 1024),
+        # per-camera rate scaled so FLEET traffic per live query is fixed
+        # (~2.4 det/s): the rush must stress ADMISSION, not saturate the
+        # three edges outright — a saturated fleet breaches every tier and
+        # proves nothing about priority
+        burst_rate=kw.pop("burst_rate", 2.4 / num_cameras),
+        alert_queue_depth=kw.pop("alert_queue_depth", 8),
+        alert_threshold_drift=kw.pop("alert_threshold_drift", 0.15),
+        failures=kw.pop("failures", ((d * 0.6, 1),)),
+        **kw)
+
+
 def pixel_city(num_cameras: int = 12, num_edges: int = 4, **kw) -> Scenario:
     """Pixel-path operating point: the frames->query loop at a size the
     CPU-only interpret-mode kernels finish inside the CI smoke budget.
@@ -617,4 +763,5 @@ SCENARIOS: Dict[str, Callable[..., Scenario]] = {
     "multi_query_city": multi_query_city,
     "query_churn": query_churn,
     "pixel_city": pixel_city,
+    "rush_hour": rush_hour,
 }

@@ -62,12 +62,26 @@ class TriageStage:
                                    gamma2=b / max(1.0 - a, 1e-6))
         else:
             proto = ThresholdState(gamma1_up=0.005)
+        self._proto = proto
         self.states: Dict[Key, ThresholdState] = {
             (q, e): proto for q in sc.query_ids for e in sc.edge_ids}
         # per-(query, edge) live Platt calibration (a, b): identity until a
         # ModelUpdate *delivers* over the WAN downlink (feedback loop)
         self.calibrations: Dict[Key, Tuple[float, float]] = {
             (q, e): IDENTITY for q in sc.query_ids for e in sc.edge_ids}
+        # priority tiers (control plane): a query's tier weight amplifies
+        # the drain signal its Eqs. 8-9 rows see, so a high-priority
+        # query's brackets tighten EARLIER under the same load — it backs
+        # off from escalating (keeping its latency inside the SLO) while
+        # best-effort queries keep riding the shared escalation path.
+        # Empty/zero weights keep every row's update bit-identical.
+        self.tier_weight: Dict[int, float] = {}
+        if sc.tiers:
+            w_of = {ts.tier: ts.weight for ts in sc.tiers}
+            tier_of = {sp.query: sp.tier for sp in sc.queries}
+            self.tier_weight = {
+                q: w for q in sc.query_ids
+                if (w := w_of.get(tier_of.get(q, 0), 0.0)) > 0.0}
         self.launches = 0
         self.elapsed_s = 0.0         # wall clock inside triage_tick
 
@@ -92,8 +106,11 @@ class TriageStage:
         if d == CLOUD:
             esc_drain += self.transport.wan_backlog(t)
         for key in keys:
-            _, e = key
+            q, e = key
             drain = max(self.sched.nodes[e].drain_time, esc_drain)
+            w = self.tier_weight.get(q)
+            if w:
+                drain *= 1.0 + w
             self.states[key] = self.states[key].update(
                 drain, 1.0, self.sc.interval_s)
 
@@ -141,6 +158,16 @@ class TriageStage:
             for key, items in batches.items()}
         self.elapsed_s += time.perf_counter() - t0
         return out
+
+    def add_query(self, query: int, weight: float = 0.0) -> None:
+        """Register a runtime-submitted query (live API): fresh threshold
+        rows from the scheme prototype, identity calibration, optional
+        tier weight — the same starting state a declared query gets."""
+        for e in self.sc.edge_ids:
+            self.states.setdefault((query, e), self._proto)
+            self.calibrations.setdefault((query, e), IDENTITY)
+        if weight > 0.0:
+            self.tier_weight[query] = weight
 
     def apply_update(self, query: int, edge: int,
                      params: Tuple[float, float]) -> None:

@@ -1,0 +1,221 @@
+"""Dual-mode control plane: driver differential, admission, alerts.
+
+The tentpole invariant: ``AsyncDriver`` in virtual time pops the SAME
+event heap in the SAME order as the DES ``SimDriver`` — every decision,
+metric, and byte counter bit-identical — so the control-plane features
+(admission, tiers, alerts) are tested once and served unchanged.
+"""
+import asyncio
+import time
+
+import numpy as np
+import pytest
+
+from repro.serving.api import (
+    AdmissionController,
+    QueryAPI,
+    TenantSpec,
+    TokenBucket,
+)
+from repro.serving.bus import Bus
+from repro.serving.engine import AsyncDriver, VirtualClock, WallClock
+from repro.system import QueryPipeline, QuerySpec, run_query
+from repro.system.scenario import (
+    Scenario,
+    city_scale,
+    rush_hour,
+    straggler_edge,
+    synthetic_confidence_stream,
+)
+
+
+def _reports_identical(a, b):
+    assert a.summary() == b.summary()
+    np.testing.assert_array_equal(a.latencies, b.latencies)
+    np.testing.assert_array_equal(a.decisions, b.decisions)
+    np.testing.assert_array_equal(a.truths, b.truths)
+    np.testing.assert_array_equal(a.finish_times, b.finish_times)
+    assert a.alerts == b.alerts
+    assert a.tier_latency == b.tier_latency
+    assert a.queries == b.queries
+
+
+# --- the tentpole differential: async(virtual) == sim -------------------------
+@pytest.mark.asyncio
+def test_async_driver_bit_exact_city_scale():
+    sc = city_scale(duration_s=6.0, num_failures=2, interval_s=0.25)
+    _reports_identical(run_query(sc),
+                       run_query(sc, driver=AsyncDriver(VirtualClock())))
+
+
+@pytest.mark.asyncio
+def test_async_driver_bit_exact_rush_hour():
+    """The full control plane (admission, tiers, alerts) under both
+    drivers: sheds, breach counts, and alert streams all identical."""
+    sc = rush_hour(duration_s=40.0, num_cameras=4)
+    a = run_query(sc)
+    b = run_query(sc, driver=AsyncDriver(VirtualClock()))
+    _reports_identical(a, b)
+    assert a.shed_queries > 0 and a.alerts      # the differential is
+    #                                             vacuous on a quiet run
+
+
+# --- admission unit tests -----------------------------------------------------
+def test_token_bucket_refills_on_simulated_clock():
+    tb = TokenBucket(rate=0.5, burst=2)
+    assert tb.take(0.0) and tb.take(0.0)        # burst spent
+    assert not tb.take(1.0)                     # only 0.5 refilled
+    assert tb.take(2.0)                         # 1 token back
+    assert not tb.take(2.0)
+
+
+def test_admission_quota_exhaustion_order():
+    """Quota is charged before backlog: a flooding tenant burns its own
+    bucket even when the cloud is idle."""
+    adm = AdmissionController((TenantSpec("a", rate=0.01, burst=1),),
+                              backlog_limit_s=10.0)
+    assert adm.admit(0.0, "a", 1, backlog_s=0.0) is None
+    assert adm.admit(0.1, "a", 1, backlog_s=0.0) == "quota"
+    assert adm.shed == {"quota": 1} and adm.admitted == 1
+
+
+def test_admission_sheds_bottom_tier_first():
+    """Tier allowances halve per tier: a backlog between the tier-1 and
+    tier-2 lines sheds tier 2, admits tier 1, and tier 0 is exempt."""
+    adm = AdmissionController(backlog_limit_s=8.0)
+    backlog = 6.0                               # tier1 allows 8, tier2: 4
+    assert adm.admit(0.0, "", 0, backlog) is None
+    assert adm.admit(0.0, "", 1, backlog) is None
+    assert adm.admit(0.0, "", 2, backlog) == "backlog"
+    assert adm.admit(0.0, "", 0, backlog_s=1e9) is None   # tier 0 exempt
+
+
+def test_rush_hour_admission_end_to_end():
+    """The acceptance row: zero top-tier SLO breaches while lower tiers
+    shed, with the sheds visible on the alert stream."""
+    r = run_query(rush_hour(duration_s=40.0, num_cameras=4))
+    s = r.summary()
+    assert s["slo_breach_top_tier"] == 0
+    assert s["shed_rate"] > 0
+    assert s["shed_queries"] == r.alerts.get("quota", 0) \
+        + r.alerts.get("backlog", 0)
+    assert r.alerts.get("failover", 0) >= 1     # the mid-rush edge death
+    assert r.shed_items > 0                     # shed queries' items drop
+    # lower tiers actually felt the rush (no vacuous victory for tier 0)
+    assert s["slo_breach_tier1"] > 0
+
+
+def test_failover_alert_emitted():
+    sc = straggler_edge(duration_s=10.0)
+    assert sc.failures                          # preset kills an edge
+    r = run_query(sc)
+    assert r.alerts.get("failover", 0) == len(sc.failures)
+
+
+def test_scenario_rejects_control_plane_with_superstep():
+    import dataclasses
+    with pytest.raises(ValueError, match="superstep"):
+        dataclasses.replace(rush_hour(duration_s=40.0, num_cameras=4),
+                            superstep=8)
+
+
+# --- runtime submission through QueryAPI --------------------------------------
+def test_query_api_live_submission_virtual_time():
+    sc = rush_hour(duration_s=40.0, num_cameras=4)
+    driver = AsyncDriver(VirtualClock())
+    pipe = QueryPipeline(sc, driver=driver)
+    api = QueryAPI(pipe)
+    top = QuerySpec(100, t_arrive_s=14.0, tenant="metro-pd", tier=0)
+    low = QuerySpec(101, t_arrive_s=18.0, tenant="hobby", tier=2)
+    driver.call_at(top.t_arrive_s, lambda t: api.submit(t, top))
+    driver.call_at(low.t_arrive_s, lambda t: api.submit(t, low))
+    r = pipe.run(synthetic_confidence_stream(sc))
+    assert driver.hooks_run == 2
+    # tier 0 is backlog-exempt: it trains mid-rush and goes live; the
+    # best-effort straggler meets the by-then-deep backlog and sheds
+    assert api.status(100) == "live"
+    assert api.status(101) == "shed"
+    assert api.status(999) == "unknown"
+    assert r.submitted_queries == len(sc.queries) + 2
+
+
+def test_query_api_duplicate_and_retire():
+    sc = rush_hour(duration_s=40.0, num_cameras=4)
+    pipe = QueryPipeline(sc, driver=AsyncDriver(VirtualClock()))
+    api = QueryAPI(pipe)
+    pipe.setup(synthetic_confidence_stream(sc))
+    api.submit(0.0, QuerySpec(100, tenant="metro-pd", tier=0))
+    with pytest.raises(ValueError, match="already registered"):
+        api.submit(0.0, QuerySpec(100, tenant="metro-pd", tier=0))
+    api.retire(5.0, 100)
+    pipe.driver.drive(pipe)
+    r = pipe.finalize()
+    assert api.status(100) == "retired"
+    assert r.submitted_queries == len(sc.queries) + 1
+
+
+# --- bus wildcard + unsubscribe (satellite fixes) -----------------------------
+def test_bus_hash_wildcard_segment_boundary():
+    bus = Bus()
+    got = []
+    bus.subscribe("edges/#", lambda t, p: got.append(t))
+    bus.publish("edges", 1)
+    bus.publish("edges/3/queue", 1)
+    bus.publish("edges9/queue", 1)              # sibling namespace: no match
+    assert got == ["edges", "edges/3/queue"]
+    catch_all = []
+    bus.subscribe("#", lambda t, p: catch_all.append(t))
+    bus.publish("anything/at/all", 1)
+    assert catch_all == ["anything/at/all"]
+
+
+def test_bus_unsubscribe_during_delivery():
+    bus = Bus()
+    got = []
+
+    def leaver(topic, payload):
+        got.append(topic)
+        assert bus.unsubscribe("x/#", leaver)
+
+    bus.subscribe("x/#", leaver)
+    bus.subscribe("x/#", lambda t, p: got.append("stay:" + t))
+    assert bus.publish("x/1", 0) == 2           # snapshot: both delivered
+    assert bus.publish("x/2", 0) == 1           # leaver is gone
+    assert got == ["x/1", "stay:x/1", "stay:x/2"]
+    assert not bus.unsubscribe("x/#", leaver)   # already removed
+
+
+def test_cascade_server_queue_is_deque():
+    """The O(n^2) pop(0) fix: the backlog queue must be a deque (head
+    pops are O(1) under a rush), and run() must drain it in FIFO order."""
+    import inspect
+
+    from repro.serving import engine
+    src = inspect.getsource(engine.CascadeServer)
+    assert "collections.deque" in src
+    assert "popleft" in src                     # O(1) head pop in run()
+    assert "queue.pop(0)" not in src            # the old O(n^2) head pop
+
+
+# --- wall clock (real time: slow tier) ----------------------------------------
+@pytest.mark.slow
+@pytest.mark.asyncio
+def test_wall_clock_paces_real_time():
+    """A 2-simulated-second gap at speed 20 must take ~0.1 wall seconds
+    — and the pump must deliver events in order while actually sleeping."""
+    clock = WallClock(speed=20.0)
+    t0 = time.monotonic()
+    asyncio.run(clock.sleep_until(2.0))
+    elapsed = time.monotonic() - t0
+    assert 0.05 <= elapsed < 1.0
+    assert clock.now() >= 2.0
+
+
+@pytest.mark.slow
+@pytest.mark.asyncio
+def test_wall_clock_driver_matches_sim():
+    sc = Scenario(name="tiny", edge_speeds=(1.0,), num_cameras=2,
+                  duration_s=3.0)
+    a = run_query(sc)
+    b = run_query(sc, driver=AsyncDriver(WallClock(speed=500.0)))
+    _reports_identical(a, b)
