@@ -97,6 +97,18 @@ TOLERANCES: Dict[str, Tuple[str, float, float]] = {
     "p99_latency_tier0": ("rel", 0.25, 0.10),
     "p99_latency_tier1": ("rel", 0.25, 0.10),
     "p99_latency_tier2": ("rel", 0.25, 0.10),
+    # cross-camera track columns (vehicle_pursuit / crowd_flow): identity
+    # continuity absolute (it is a 0..1 rate), count columns relative
+    # with small floors (association is deterministic, but intentional
+    # threshold re-tunes shift counts by a few), and the per-tick fused
+    # associate launch budget near-exact
+    "track_continuity": ("abs", 0.08, 0.0),
+    "id_switches": ("rel", 0.30, 3.0),
+    "tracks_born": ("rel", 0.30, 3.0),
+    "track_handoffs": ("rel", 0.30, 3.0),
+    "prewarms_shipped": ("rel", 0.50, 3.0),
+    "prewarm_hits": ("rel", 0.50, 3.0),
+    "track_launches_per_tick": ("abs", 0.05, 0.0),
 }
 PER_QUERY_TOLERANCES: Dict[str, Tuple[str, float, float]] = {
     "f2": ("abs", 0.05, 0.0),
@@ -211,7 +223,44 @@ def row_consistency(tag: str, row: dict,
         out.append(msg)
         _note(checks, tag, "alerts_total", 0, row.get("shed_queries"),
               "> 0 when sheds > 0", False, msg)
+    # the fused-association launch budget: at most ONE
+    # ops.associate_tracks launch per scheduler tick, fleet-wide
+    lpt = row.get("track_launches_per_tick", 0.0)
+    if lpt > 1.0:
+        msg = (f"track_launches_per_tick={lpt} > 1 — association must be "
+               f"ONE fused launch per tick")
+        out.append(msg)
+        _note(checks, tag, "track_launches_per_tick", lpt, 1.0, "<= 1",
+              False, msg)
     return out
+
+
+def handoff_wins(name: str, schemes: dict,
+                 checks: Optional[List[Check]] = None) -> List[str]:
+    """The predictive hand-off must BEAT its own ablation within one
+    fresh report.  The row pair is deterministic (same stream, same
+    seed), so the comparison is exact: where pre-warms actually landed
+    (``prewarm_hits > 0`` — vehicle_pursuit's sparse chase), ID switches
+    must be STRICTLY below the no-handoff row; where the fleet stays
+    naturally warm (crowd_flow's dense flow, zero hits), hand-off must
+    at least do no harm."""
+    on = schemes.get("surveiledge", {})
+    off = schemes.get("surveiledge_no_handoff", {})
+    if not (on.get("track_items") and off.get("track_items")):
+        return []
+    tag = f"{name}/surveiledge"
+    sw_on, sw_off = on.get("id_switches", 0), off.get("id_switches", 0)
+    strict = on.get("prewarm_hits", 0) > 0
+    ok = sw_on < sw_off if strict else sw_on <= sw_off
+    band = "< no_handoff (prewarms hit)" if strict else "<= no_handoff"
+    _note(checks, tag, "id_switches(handoff vs ablation)", sw_on, sw_off,
+          band, ok,
+          "" if ok else "predictive hand-off no longer reduces ID switches")
+    if not ok:
+        return [f"{tag}: id_switches={sw_on} vs the no-handoff ablation's "
+                f"{sw_off} (required {band}) — the predictive hand-off "
+                f"stopped winning"]
+    return []
 
 
 def compare_report(baseline: dict, fresh: dict,
@@ -221,6 +270,7 @@ def compare_report(baseline: dict, fresh: dict,
     name = baseline.get("scenario", "?")
     b_schemes = baseline.get("schemes", {})
     f_schemes = fresh.get("schemes", {})
+    breaches.extend(handoff_wins(name, f_schemes, checks))
     for scheme in sorted(set(b_schemes) | set(f_schemes)):
         tag = f"{name}/{scheme}"
         if scheme not in f_schemes:

@@ -69,6 +69,10 @@ SMOKE_OVERRIDES = {
     "query_churn": dict(cameras=8, duration=60.0),
     "pixel_city": dict(frontend="pixel", duration=10.0),
     "rush_hour": dict(cameras=4, duration=40.0),
+    # track presets pin their own camera/edge geometry (the CLI default of
+    # 6 cameras would break the alternating-edge chain the hand-off rides)
+    "vehicle_pursuit": dict(cameras=12, duration=60.0),
+    "crowd_flow": dict(cameras=8, duration=45.0),
 }
 
 
@@ -184,6 +188,13 @@ def run_scenario(name: str, frontend_name: str, cameras: int,
         variants.append(("surveiledge_fp_wire", dataclasses.replace(
             sc.with_scheme("surveiledge"), quantize_downlink=False,
             speculative_escalation=False)))
+    # the cross-camera track ablation rides along wherever predictive
+    # hand-off is on: same stream, hand-off disabled.  The committed row
+    # pair is what lets the report gate check the ID-switch win
+    # differentially (no_handoff must switch identities MORE).
+    if sc.track_query_ids and sc.predictive_handoff:
+        variants.append(("surveiledge_no_handoff", dataclasses.replace(
+            sc.with_scheme("surveiledge"), predictive_handoff=False)))
     per_scheme = {}
     for label, variant in variants:
         if frontend is not None:
@@ -211,6 +222,14 @@ def run_scenario(name: str, frontend_name: str, cameras: int,
               f"{s['escalated']:7d}{s['reconciliation_flip_rate']:7.3f}"
               f"{s['rerouted']:9d}{s['kernel_launches']:9d}"
               f"{s['launches_per_tick']:7.2f}")
+        if s.get("track_items"):
+            print(f"   tracks: {s['tracks_born']} born, "
+                  f"continuity {s['track_continuity']:.3f} "
+                  f"({s['id_switches']} switches), "
+                  f"{s['track_handoffs']} handoffs, "
+                  f"{s['prewarm_hits']}/{s['prewarms_shipped']} "
+                  f"prewarm hits, {s['track_launches_per_tick']:.2f} "
+                  f"assoc launches/tick")
         if r.queries and label == "surveiledge":
             for q, row in sorted(r.per_query_summary().items()):
                 print(f"   q{q} [{row.get('train_scheme', '?'):>12s}]"

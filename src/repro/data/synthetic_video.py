@@ -20,6 +20,11 @@ import numpy as np
 NUM_CLASSES = 12
 QUERY_CLASS = 3          # moped, as in the paper
 SPRITE = 16              # sprite side (pixels)
+CAMERA_FIELD_W = 128     # world width (px) each camera's field of view
+#                          covers on the 1-D camera chain the trajectory
+#                          ground truth (scenario._track_substream) uses —
+#                          matches CameraSpec.width, so object speeds in
+#                          px/s mean the same thing in both worlds
 
 
 def _class_texture(cls: int, size: int = SPRITE) -> np.ndarray:
@@ -165,3 +170,19 @@ def labeled_crop_batch(classes: Sequence[int], rng: np.random.Generator,
                        ) -> Tuple[np.ndarray, np.ndarray]:
     crops = np.stack([object_crop(c, rng, size) for c in classes])
     return crops_to_tokens(crops, vocab_size), np.asarray(classes, np.int32)
+
+
+def crop_embedding(crop: np.ndarray, dim: int) -> np.ndarray:
+    """Cheap appearance embedding for one detection crop: 4x4 average-
+    pooled RGB, mean-centered, L2-normalized, truncated/zero-padded to
+    ``dim``.  Deterministic in the pixels, so the pixel frontend's re-ID
+    embeddings are reproducible without a model in the loop; crops of the
+    same class texture land close in cosine, different textures far."""
+    S = crop.shape[0]
+    p = crop.reshape(4, S // 4, 4, S // 4, 3).mean(axis=(1, 3)).reshape(-1)
+    p = p - p.mean()
+    v = np.zeros(dim, np.float32)
+    n = min(dim, p.size)
+    v[:n] = p[:n]
+    nrm = float(np.linalg.norm(v))
+    return v / nrm if nrm > 0 else v

@@ -22,6 +22,7 @@ from repro.kernels import flash_attention as _fa
 from repro.kernels import framediff as _fd
 from repro.kernels import morphology as _mo
 from repro.kernels import pixel_cascade as _pc
+from repro.kernels import similarity as _sim
 from repro.kernels import triage as _tr
 from repro.kernels import ref as _ref
 from repro.kernels.runtime import interpret_default  # noqa: F401  (re-export)
@@ -338,3 +339,61 @@ def calibrate_fleet(scores, truths, *, iters: int = 8, min_count: int = 8,
         params, counts = _calibrate_fleet_pallas(
             scores, truths, iters=iters, min_count=min_count)
     return params[:E], counts[:E]
+
+
+@jax.jit
+def _associate_pallas(emb, trk, crop_q, trk_q, thr):
+    return _sim.associate_pallas(emb, trk, crop_q, trk_q, thr)
+
+
+def associate_tracks(emb, trk, crop_q, trk_q, thr, *,
+                     use_pallas: bool = True):
+    """Fleet-wide re-ID association: ONE fused launch per scheduler tick.
+
+    ``emb`` is the (M, D) matrix of every detection-crop embedding the
+    whole fleet produced this tick (L2-normalize upstream — scores are
+    cosines) and ``trk`` the (K, D) live track table across ALL track
+    queries; ``crop_q`` (M,) / ``trk_q`` (K,) carry each row's query id
+    (crops only ever match tracks of their own query, which is what lets
+    every live track query share the single launch) and ``thr`` (M,) the
+    per-crop acceptance floor — warm/cold edge state reaches the kernel as
+    data, not trace constants, same contract as ``triage_fleet``'s runtime
+    thresholds.  Crops claim tracks greedily in row order, one-to-one.
+
+    Returns (assign (M,) int32 — the matched row index into the UNPADDED
+    ``trk``, or -1 — and sim (M,) float32, the best still-unclaimed score
+    the crop saw, -1e30 when its query had none).
+
+    M, K, and D are padded up to power-of-two buckets (min 8) before the
+    launch — the ``triage_fleet`` jit-cache contract — then the pads are
+    sliced back off.  Pad crops carry query id -1 and pad tracks -2, so a
+    pad row can never match or be claimed (real ids are >= 0); pad crops
+    are appended AFTER the real rows, so the greedy claim order of real
+    crops is unchanged by padding.  ``use_pallas=False`` dispatches to the
+    independent NumPy oracle (``ref.associate_tracks_ref``) outside jit.
+    """
+    emb = jnp.asarray(emb, jnp.float32)
+    trk = jnp.asarray(trk, jnp.float32)
+    crop_q = jnp.asarray(crop_q, jnp.int32)
+    trk_q = jnp.asarray(trk_q, jnp.int32)
+    thr = jnp.asarray(thr, jnp.float32)
+    M, D = emb.shape
+    K = trk.shape[0]
+    mb, kb, db = _bucket(M), _bucket(K), _bucket(D)
+    if db != D:
+        emb = jnp.pad(emb, ((0, 0), (0, db - D)))
+        trk = jnp.pad(trk, ((0, 0), (0, db - D)))
+    if mb != M:
+        emb = jnp.pad(emb, ((0, mb - M), (0, 0)))
+        crop_q = jnp.pad(crop_q, (0, mb - M), constant_values=-1)
+        thr = jnp.pad(thr, (0, mb - M), constant_values=2.0)
+    if kb != K:
+        trk = jnp.pad(trk, ((0, kb - K), (0, 0)))
+        trk_q = jnp.pad(trk_q, (0, kb - K), constant_values=-2)
+    if not use_pallas:
+        assign, sim = _ref.associate_tracks_ref(
+            np.asarray(emb), np.asarray(trk), np.asarray(crop_q),
+            np.asarray(trk_q), np.asarray(thr))
+        return jnp.asarray(assign)[:M], jnp.asarray(sim)[:M]
+    assign, sim = _associate_pallas(emb, trk, crop_q, trk_q, thr)
+    return assign[:M], sim[:M]

@@ -214,3 +214,42 @@ def calibrate_fleet_ref(scores: np.ndarray, truths: np.ndarray,
             b = float(np.clip(b - (h00 * g1 - h01 * g0) / det, -B_MAX, B_MAX))
         params[e] = (a, b)
     return params.astype(np.float32), counts
+
+
+def associate_tracks_ref(emb: np.ndarray, trk: np.ndarray,
+                         crop_q: np.ndarray, trk_q: np.ndarray,
+                         thr: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """NumPy twin of ``similarity.associate_pallas``: greedy re-ID matching.
+
+    Deliberately an *independent* implementation (explicit per-crop python
+    loop and a mutable claimed set instead of the kernel's vectorized
+    one-hot ``fori_loop``) so the parity test checks the matching
+    semantics, not a shared implementation.  emb (M, D) and trk (K, D)
+    L2-normalized float32, crop_q (M,) / trk_q (K,) int32 query ids, thr
+    (M,) per-crop acceptance floors -> (assign (M,) int32 track row index
+    or -1, sim (M,) float32 best available score, -1e30 when the crop's
+    query has no unclaimed track).  Crops match greedily in row order,
+    one-to-one, only within their own query id.
+    """
+    emb = np.asarray(emb, np.float32)
+    trk = np.asarray(trk, np.float32)
+    crop_q = np.asarray(crop_q, np.int32)
+    trk_q = np.asarray(trk_q, np.int32)
+    thr = np.asarray(thr, np.float32)
+    M = emb.shape[0]
+    K = trk.shape[0]
+    assign = np.full(M, -1, np.int32)
+    sim = np.full(M, np.float32(-1e30), np.float32)
+    if K == 0:
+        return assign, sim
+    s = emb @ trk.T                                     # (M, K) float32
+    s = np.where(crop_q[:, None] == trk_q[None, :], s, np.float32(-1e30))
+    claimed = np.zeros(K, bool)
+    for i in range(M):
+        avail = np.where(claimed, np.float32(-1e30), s[i])
+        j = int(np.argmax(avail))
+        sim[i] = avail[j]
+        if avail[j] >= thr[i]:
+            assign[i] = j
+            claimed[j] = True
+    return assign, sim

@@ -35,10 +35,15 @@ class Alert:
 class AlertStream:
     """Bus-subscribed alert aggregator (counts by kind + recent ring)."""
 
-    def __init__(self, bus, keep: int = 256):
+    def __init__(self, bus, keep: int = 256, keep_per_scope: int = 8):
         self._bus = bus
         self.counts: Dict[str, int] = {}
         self.recent: Deque[Alert] = collections.deque(maxlen=keep)
+        # per-scope view ("edge3", "admission", ...): kind counts + a
+        # short recent ring each, feeding health_snapshot
+        self._scope_counts: Dict[str, Dict[str, int]] = {}
+        self._scope_recent: Dict[str, Deque[Alert]] = {}
+        self._keep_per_scope = keep_per_scope
         bus.subscribe("alerts/#", self._on_alert)
 
     def _on_alert(self, topic: str, payload: Any) -> None:
@@ -48,7 +53,17 @@ class AlertStream:
         kind = topic.rsplit("/", 1)[-1]
         self.counts[kind] = self.counts.get(kind, 0) + 1
         t = payload.get("t", 0.0) if isinstance(payload, dict) else 0.0
-        self.recent.append(Alert(float(t), topic, payload))
+        alert = Alert(float(t), topic, payload)
+        self.recent.append(alert)
+        parts = topic.split("/")
+        scope = parts[1] if len(parts) > 1 else ""
+        sc = self._scope_counts.setdefault(scope, {})
+        sc[kind] = sc.get(kind, 0) + 1
+        ring = self._scope_recent.get(scope)
+        if ring is None:
+            ring = self._scope_recent[scope] = collections.deque(
+                maxlen=self._keep_per_scope)
+        ring.append(alert)
 
     @property
     def total(self) -> int:
@@ -58,6 +73,20 @@ class AlertStream:
         """Per-kind counts, sorted by kind (the ``QueryReport.alerts``
         payload)."""
         return dict(sorted(self.counts.items()))
+
+    def health_snapshot(self, edge: int) -> Dict[str, Any]:
+        """One edge's operator health view (``QueryReport.edge_health``):
+        per-kind alert counts for scope ``edge<edge>``, the scope's most
+        recent alerts (topic, t, payload), and its total.  An edge that
+        never alerted reports a clean ``{"alerts": {}, "recent": [],
+        "total": 0}`` — the healthy baseline, not an error."""
+        scope = f"edge{edge}"
+        counts = dict(sorted(self._scope_counts.get(scope, {}).items()))
+        recent = [
+            {"t": round(a.t, 3), "topic": a.topic, "payload": a.payload}
+            for a in self._scope_recent.get(scope, ())]
+        return {"alerts": counts, "recent": recent,
+                "total": sum(counts.values())}
 
     def close(self) -> None:
         """Detach from the bus (safe mid-delivery: publish iterates a

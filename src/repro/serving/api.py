@@ -171,7 +171,7 @@ class QueryAPI:
         from repro.system.events import QueryArrival
         self._pipe.register_query(spec)
         self._pipe.events.push(max(t, spec.t_arrive_s),
-                               QueryArrival(spec.query))
+                               QueryArrival(spec.query, spec.kind))
         res = SubmitResult(spec.query, "submitted")
         self.log.append(res)
         return res

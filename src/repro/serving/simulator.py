@@ -40,6 +40,10 @@ class Item:
     is_query: bool            # ground truth
     nbytes: int = 3 * 128 * 128  # crop payload (~49 KB, 128x128 RGB)
     query: int = 0            # which continuous query (CQ) scored this crop
+    # cross-camera track queries (QuerySpec.kind == "track") only; both
+    # default inert so every classify-path construction is unchanged
+    emb: Optional[np.ndarray] = None   # L2-normalizable re-ID embedding
+    gt_track: int = -1        # ground-truth trajectory id (-1: untracked)
 
 
 @dataclasses.dataclass

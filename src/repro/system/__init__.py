@@ -30,6 +30,7 @@ from repro.system.scenario import (
     Scenario,
     bursty_crowds,
     city_scale,
+    crowd_flow,
     drifting_city,
     frame_schedule,
     heterogeneous_multi_edge,
@@ -43,8 +44,10 @@ from repro.system.scenario import (
     single_edge,
     straggler_edge,
     synthetic_confidence_stream,
+    vehicle_pursuit,
 )
 from repro.system.superstep import Ctrl, SuperstepDriver
+from repro.system.tracks import TrackStage
 
 __all__ = [
     "ConfidenceStreamFrontend",
@@ -64,8 +67,10 @@ __all__ = [
     "StreamingWindows",
     "SuperstepDriver",
     "apply_calibration",
+    "TrackStage",
     "bursty_crowds",
     "city_scale",
+    "crowd_flow",
     "drifting_city",
     "frame_schedule",
     "heterogeneous_multi_edge",
@@ -80,4 +85,5 @@ __all__ = [
     "single_edge",
     "straggler_edge",
     "synthetic_confidence_stream",
+    "vehicle_pursuit",
 ]

@@ -102,22 +102,31 @@ class ModelUpdate:
     * ``kind="weights"`` — the freshly fine-tuned CQ model itself (§IV-B):
       the edge starts serving the query only once this delivers; the
       query's detections wait in the edge's deferral buffer until then.
+    * ``kind="prewarm"`` — a track query's predictive hand-off: the track
+      stage predicted the target's next-likely edge and ships that edge's
+      thresholds/CQ weights *before* the target arrives, turning the WAN
+      downlink speculative.  At delivery the edge is marked warm for the
+      query (``tracks.TrackStage.apply_prewarm``); ``params`` is None.
 
     Applied at *delivery* time: ticks that fire while the update is in
     flight still triage with the stale model/calibration — the same race a
-    real edge device lives with."""
+    real edge device lives with (a pre-warm that delivers after the target
+    has already crossed simply arrives too late to help)."""
     edge: int
-    params: Optional[Tuple[float, float]]     # Platt (a, b); None for weights
+    params: Optional[Tuple[float, float]]     # Platt (a, b); None otherwise
     query: int = 0
-    kind: str = "calibration"                 # or "weights"
+    kind: str = "calibration"                 # or "weights" / "prewarm"
 
 
 @dataclasses.dataclass(frozen=True)
 class QueryArrival:
     """A new continuous query (CQ) enters the system: the cloud starts its
     Fig. 5 fine-tune (``core.finetune.scheme_train_time``) the instant this
-    fires; ``TrainDone`` follows after the scheme's training time."""
+    fires; ``TrainDone`` follows after the scheme's training time.
+    ``kind`` mirrors the spec's ``QuerySpec.kind`` so event consumers can
+    dispatch without a registry lookup."""
     query: int
+    kind: str = "classify"
 
 
 @dataclasses.dataclass(frozen=True)

@@ -224,6 +224,28 @@ class QueryReport:
     # tiers queue and shed
     tier_latency: Dict[int, Dict[str, float]] = \
         dataclasses.field(default_factory=dict)
+    # --- cross-camera track queries (QuerySpec.kind == "track") ---------------
+    # all zero (and absent from summary()) on classify-only runs, so every
+    # pre-track report row keeps its exact schema
+    track_items: int = 0                   # embedded detections associated
+    tracks_born: int = 0                   # registry track births
+    track_matches: int = 0                 # crop -> live-track associations
+    id_switches: int = 0                   # ground-truth object re-observed
+    #                                        on a DIFFERENT registry track
+    track_opportunities: int = 0           # ground-truth re-observations
+    #                                        (the ID-switch denominator)
+    track_handoffs: int = 0                # associations that crossed edges
+    prewarms_shipped: int = 0              # predictive hand-off downlink
+    #                                        shipments (Transport.ship_update)
+    prewarm_hits: int = 0                  # matches only the pre-warmed
+    #                                        (not naturally warm) floor
+    #                                        accepted — the hand-off's win
+    track_launches: int = 0                # fused ops.associate_tracks
+    #                                        launches (<= 1 per tick)
+    # edge -> AlertStream.health_snapshot(edge): per-edge alert counts +
+    # recent alert payloads, the operator's health view (never in summary()
+    # — it is a nested dict, not a flat metric column)
+    edge_health: Dict[int, Dict] = dataclasses.field(default_factory=dict)
 
     @property
     def n_items(self) -> int:
@@ -405,6 +427,35 @@ class QueryReport:
                                        if len(self.query_ids) else 1))),
             "cloud_train_s": round(self.cloud_train_s, 3),
             **self._control_plane_summary(),
+            **self._track_summary(),
+        }
+
+    @property
+    def track_continuity(self) -> float:
+        """1 - id_switches / opportunities: fraction of ground-truth
+        re-observations that kept their registry identity (1.0 when no
+        opportunities — an empty run has nothing to switch)."""
+        if not self.track_opportunities:
+            return 1.0
+        return 1.0 - self.id_switches / self.track_opportunities
+
+    def _track_summary(self) -> Dict[str, float]:
+        """Track columns — only emitted when a track query actually ran,
+        so classify-only rows keep their exact schema."""
+        if not self.track_items:
+            return {}
+        return {
+            "track_items": self.track_items,
+            "tracks_born": self.tracks_born,
+            "track_matches": self.track_matches,
+            "id_switches": self.id_switches,
+            "track_continuity": round(self.track_continuity, 4),
+            "track_handoffs": self.track_handoffs,
+            "prewarms_shipped": self.prewarms_shipped,
+            "prewarm_hits": self.prewarm_hits,
+            # <= 1.0 by construction: the per-tick fused-launch budget
+            "track_launches_per_tick": round(
+                self.track_launches / max(self.ticks, 1), 3),
         }
 
     def _control_plane_summary(self) -> Dict[str, float]:

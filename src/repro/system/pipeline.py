@@ -88,11 +88,12 @@ from repro.system.events import (
     Transfer,
 )
 from repro.system.feedback import FeedbackStage
-from repro.system.frontend import ConfidenceStreamFrontend, Frontend
+from repro.system.frontend import ConfidenceStreamFrontend
 from repro.system.nodes import NodeBank
 from repro.system.queries import QuerySet, QuerySpec
 from repro.system.scenario import Scenario
 from repro.system.superstep import Ctrl, SuperstepDriver
+from repro.system.tracks import TrackStage
 from repro.system.transport import Transport
 from repro.system.triage import ACCEPT, ESCALATE, TriageStage
 
@@ -341,6 +342,23 @@ class QueryPipeline:
                 live[edge] = batch
         if not live:
             return
+        if self.track is not None:
+            # cross-camera association: every live track query's embedded
+            # detections, fleet-wide, in ONE fused similarity launch per
+            # tick (same launch budget discipline as triage).  Runs before
+            # the edge_only split so both cascade and edge_only schemes
+            # track; cloud_only has no ticks, so it never associates.
+            tb: Dict[Tuple[int, int], List[Item]] = {}
+            for edge, batch in live.items():
+                for it in batch:
+                    if (it.query in self._track_qs
+                            and it.emb is not None
+                            and not self.queries.is_shed(it.query)
+                            and self.queries.live_on(it.query, edge)):
+                        tb.setdefault((it.query, edge), []).append(it)
+            if tb:
+                for done, upd in self.track.tick(t, tb):
+                    self.events.push(done, upd)
         if self.sc.scheme == "edge_only":
             for edge, batch in live.items():
                 for it in batch:
@@ -583,6 +601,13 @@ class QueryPipeline:
         self.triage_stage = TriageStage(sc, self.sched, self.transport)
         self.feedback = FeedbackStage(sc, self.transport)
         self.queries = QuerySet(sc)
+        # cross-camera track queries: the fleet-wide track registry exists
+        # only when a track-kind query does (classify-only runs carry zero
+        # extra state and stay bit-identical)
+        self._track_qs = {q for q, sp in self.queries.specs.items()
+                          if sp.kind == "track"}
+        self.track = TrackStage(sc, self.transport) \
+            if self._track_qs else None
         self._lat: List[float] = []
         self._dec: List[bool] = []
         self._tru: List[bool] = []
@@ -671,7 +696,8 @@ class QueryPipeline:
         if self.queries.lifecycle:
             for sp in sorted(self.queries.specs.values(),
                              key=lambda s: s.query):
-                self.events.push(sp.t_arrive_s, QueryArrival(sp.query))
+                self.events.push(sp.t_arrive_s,
+                                 QueryArrival(sp.query, sp.kind))
                 if sp.t_retire_s is not None:
                     self.events.push(sp.t_retire_s, QueryRetire(sp.query))
         if self.feedback.enabled:
@@ -744,6 +770,9 @@ class QueryPipeline:
             self.queries.retire(ev.query)
             self.triage_stage.retire_query(ev.query)
             self.feedback.retire_query(ev.query)
+            if self.track is not None:
+                # the query's fleet-wide track table dies with it
+                self.track.retire_query(ev.query)
             # stragglers still waiting for weights are answered with
             # the pre-trained prior; in-flight escalations complete
             # normally and are still counted
@@ -776,6 +805,15 @@ class QueryPipeline:
                         (math.floor(t / sc.interval_s) + 1)
                         * sc.interval_s,
                         ReleaseTick(int(math.floor(t / sc.interval_s))))
+            elif ev.kind == "prewarm":
+                # predictive hand-off delivered: the edge holds the
+                # query's track state hot for prewarm_ttl_s.  A late
+                # delivery (target already arrived cold) simply misses —
+                # that is the stale-in-flight cost the ablation measures.
+                if ev.edge not in self.nodes.dead \
+                        and not self.queries.is_retired(ev.query) \
+                        and self.track is not None:
+                    self.track.apply_prewarm(t, ev.query, ev.edge)
             elif ev.edge not in self.nodes.dead \
                     and not self.queries.is_retired(ev.query):
                 # a calibration that retired mid-flight must not undo
@@ -835,6 +873,10 @@ class QueryPipeline:
         self.triage_stage.add_query(sp.query,
                                     tsp.weight if tsp is not None else 0.0)
         self.feedback.add_query(sp.query)
+        if sp.kind == "track":
+            self._track_qs.add(sp.query)
+            if self.track is None:
+                self.track = TrackStage(self.sc, self.transport)
 
     def finalize(self) -> MX.QueryReport:
         """Assemble the QueryReport once the driver has drained the run."""
@@ -867,6 +909,20 @@ class QueryPipeline:
                     "slo_s": self._tiers[k].slo_s,
                     "slo_breaches": self._tier_breach[k],
                 }
+        # cross-camera track accounting (absent -> zeros, summary stays
+        # schema-identical for classify-only runs)
+        trk = self.track
+        track_kwargs = dict(
+            track_items=trk.items,
+            tracks_born=trk.tracks_born,
+            track_matches=trk.matches,
+            id_switches=trk.id_switches,
+            track_opportunities=trk.opportunities,
+            track_handoffs=trk.handoffs,
+            prewarms_shipped=trk.prewarms,
+            prewarm_hits=trk.prewarm_hits,
+            track_launches=trk.launches,
+        ) if trk is not None else {}
         return MX.QueryReport(
             scenario=sc.name,
             scheme=sc.scheme,
@@ -901,12 +957,17 @@ class QueryPipeline:
             thresholds=self.triage_stage.final_thresholds()
             if sc.scheme in ("surveiledge", "surveiledge_fixed") else {},
             stage_timings={**(self._frontend_timings or {}),
-                           "triage_s": self.triage_stage.elapsed_s},
+                           "triage_s": self.triage_stage.elapsed_s,
+                           **({"associate_s": trk.elapsed_s}
+                              if trk is not None else {})},
             alerts=self.alerts.snapshot(),
             submitted_queries=self._submitted,
             shed_queries=self._shed_queries,
             shed_items=self._shed_items,
             tier_latency=tier_rows,
+            **track_kwargs,
+            edge_health={e: self.alerts.health_snapshot(e)
+                         for e in sc.edge_ids},
         )
 
     def run(self, items: Sequence[Item],
@@ -918,28 +979,51 @@ class QueryPipeline:
         return self.finalize()
 
 
-def run_query(scenario: Scenario,
+def run_query(scenario: Scenario, *,
               items: Optional[Sequence[Item]] = None,
-              frontend: Optional[Frontend] = None,
+              frontend: Optional[object] = None,
               driver: Optional[object] = None) -> MX.QueryReport:
     """Run one query scenario end to end and return its ``QueryReport``.
 
-    The detection stream comes from ``frontend`` (any ``Frontend``
-    implementation); by default a ``ConfidenceStreamFrontend`` over
-    ``items`` (or ``scenario.items``) — a pre-scored stream, e.g. the
-    CQ-model-scored benchmark workload, re-homed onto this scenario's
-    topology — or, when no items are given, a model-free synthetic stream
-    from the scenario's camera fleet.  Pass
-    ``frontend=PixelFrontend(...)`` (``repro.system.pixel_frontend``) to
-    run the paper's full pixel path instead: rendered frames -> Pallas
-    framediff/morphology -> motion crops -> CQ-classifier confidences,
-    with per-stage wall-clock in ``QueryReport.stage_timings``.
+    All knobs are keyword-only; the positional surface is the scenario.
+
+    ``frontend`` is the ONE seam that picks the detection stream:
+
+      "confidence" (default)   ``ConfidenceStreamFrontend`` over ``items``
+                               (or ``scenario.items``) — a pre-scored
+                               stream re-homed onto this scenario's
+                               topology, or, with no items, the model-free
+                               synthetic stream from the camera fleet.
+      "pixel"                  the paper's full pixel path
+                               (``repro.system.pixel_frontend``): rendered
+                               frames -> Pallas framediff/morphology ->
+                               motion crops -> CQ-classifier confidences,
+                               with per-stage wall-clock in
+                               ``QueryReport.stage_timings``.
+      a ``Frontend`` instance  anything implementing the seam, for custom
+                               streams (mutually exclusive with ``items``).
 
     ``driver`` selects the event-loop strategy: None/``SimDriver`` for the
     classic DES, or ``repro.serving.engine.AsyncDriver`` to pump the same
     events from asyncio (virtual or wall clock) — the real-time serving
     mode with live query submission (``repro.serving.api.QueryAPI``).
     """
+    if isinstance(frontend, str):
+        if frontend == "confidence":
+            frontend = ConfidenceStreamFrontend(
+                items if items is not None else scenario.items)
+            items = None
+        elif frontend == "pixel":
+            if items is not None:
+                raise ValueError(
+                    "items= cannot combine with frontend='pixel' "
+                    "(the pixel path renders its own stream)")
+            from repro.system.pixel_frontend import PixelFrontend
+            frontend = PixelFrontend()
+        else:
+            raise ValueError(
+                f"unknown frontend {frontend!r} (expected 'confidence', "
+                "'pixel', or a Frontend instance)")
     if frontend is not None and items is not None:
         raise ValueError("pass either items= or frontend=, not both "
                          "(a custom frontend produces its own stream)")

@@ -122,7 +122,7 @@ class PixelFrontend(Frontend):
     def _stream_key(sc: Scenario) -> tuple:
         return (sc.name, sc.seed, sc.num_cameras, sc.num_edges,
                 sc.duration_s, sc.interval_s, sc.burst_boost, sc.burst_rate,
-                sc.frame_hw)
+                sc.frame_hw, sc.track_query_ids, sc.embedding_dim)
 
     def stream(self, sc: Scenario) -> List[Item]:
         key = self._stream_key(sc)
@@ -170,6 +170,11 @@ class PixelFrontend(Frontend):
             self.launches += 1
 
             nbytes = self.crop * self.crop * 3
+            # track queries declared -> every detection carries a pixel-
+            # derived re-ID embedding (appearance hash of the crop); no
+            # trajectory ground truth on this path, so gt_track stays -1
+            # (ID-switch accounting needs the synthetic-trajectory stream)
+            embed = bool(sc.track_query_ids)
             for (j, det), cf in zip(flat, conf):
                 cls = match_truth(det.box, truths[j])
                 items.append(Item(
@@ -178,7 +183,9 @@ class PixelFrontend(Frontend):
                     edge_device=cams[j].cam_id % sc.num_edges + 1,
                     conf=float(cf),
                     is_query=cls == self.query_class,
-                    nbytes=nbytes))
+                    nbytes=nbytes,
+                    emb=SV.crop_embedding(det.crop, sc.embedding_dim)
+                    if embed else None))
         items.sort(key=lambda it: it.t_arrival)
         return items, {"render_s": t_render, "framediff_s": t_framediff,
                        "classify_s": t_classify}

@@ -52,17 +52,34 @@ class QuerySpec:
     ``tenant`` / ``tier`` are the control-plane coordinates (admission
     quotas and priority, ``repro.serving.api``): both default to the
     tierless/quota-free engine, which keeps every pre-control-plane
-    scenario bit-identical."""
+    scenario bit-identical.
+
+    ``kind`` selects what the query *asks*:
+
+    * ``"classify"`` (the default — every pre-existing construction) —
+      per-camera classification: is this crop the query class?
+    * ``"track"`` — cross-camera re-ID: detections carry embeddings, the
+      fleet-wide track registry (``system/tracks.py``) associates them
+      against live tracks in ONE fused similarity launch per tick, and a
+      predictive hand-off pre-warms the next-likely edge over the WAN
+      downlink.  Track queries still ride the full classify lifecycle
+      (fine-tune, weight shipment, triage, tiers, admission) — the track
+      stage is additive."""
     query: int
     t_arrive_s: float = 0.0
     t_retire_s: Optional[float] = None
     train_scheme: str = "surveiledge"
     tenant: str = ""
     tier: int = 0
+    kind: str = "classify"
 
     def __post_init__(self):
         if self.query < 0:
             raise ValueError(f"query id {self.query} must be >= 0")
+        if self.kind not in ("classify", "track"):
+            raise ValueError(
+                f"query {self.query}: unknown kind {self.kind!r} "
+                f"(expected 'classify' or 'track')")
         if self.tier < 0:
             raise ValueError(
                 f"query {self.query}: tier={self.tier} must be >= 0")

@@ -137,6 +137,24 @@ class Scenario:
     # the provisional serve time; accuracy still counts the reconciled
     # (cloud) verdict, and the flip rate is reported and gated.
     speculative_escalation: bool = False
+    # --- cross-camera track queries (QuerySpec.kind == "track") ---------------
+    # Knobs are inert unless a track query is declared; classify-only
+    # scenarios are bit-identical to the pre-track engine.
+    embedding_dim: int = 32                  # re-ID embedding width D
+    track_objects: int = 4                   # persistent trajectory targets
+    #                                          (query class) per track query
+    track_distractors: int = 2               # persistent non-query movers
+    track_speed_px_s: Tuple[float, float] = (24.0, 48.0)  # |vx| draw range
+    # (warm, cold) cosine acceptance floors: an edge that is warm for the
+    # query (a live track was just there, or a pre-warm delivered) accepts
+    # cross-camera matches down to `warm`; a cold edge demands `cold` —
+    # which only a same-camera continuation clears.  The gap is exactly
+    # what the predictive hand-off buys.
+    track_thresholds: Tuple[float, float] = (0.85, 0.97)
+    track_ttl_s: float = 3.0                 # unseen tracks retire after this
+    predictive_handoff: bool = True          # ship pre-warms ahead of targets
+    prewarm_nbytes: int = 4096               # downlink payload per pre-warm
+    prewarm_ttl_s: float = 12.0              # delivered pre-warm stays warm
     # --- stream --------------------------------------------------------------
     seed: int = 0
     items: Optional[Sequence[Item]] = None   # injected pre-scored stream
@@ -281,6 +299,37 @@ class Scenario:
                 f"scenario {self.name!r}: metrics_window_s="
                 f"{self.metrics_window_s} must be positive (or None for "
                 f"per-item arrays)")
+        # --- cross-camera track queries ---------------------------------------
+        if self.track_query_ids:
+            if self.superstep is not None:
+                raise ValueError(
+                    f"scenario {self.name!r}: track queries require "
+                    f"superstep=None — track birth/hand-off decisions are "
+                    f"per-tick live signals the scan path does not model")
+            if self.embedding_dim < self.num_cameras:
+                raise ValueError(
+                    f"scenario {self.name!r}: embedding_dim="
+                    f"{self.embedding_dim} must be >= num_cameras="
+                    f"{self.num_cameras} (per-camera appearance tints are "
+                    f"orthonormal in the embedding space)")
+            warm, cold = self.track_thresholds
+            if not 0.0 < warm <= cold <= 1.0:
+                raise ValueError(
+                    f"scenario {self.name!r}: track_thresholds="
+                    f"{self.track_thresholds} must satisfy "
+                    f"0 < warm <= cold <= 1")
+            if self.track_ttl_s <= 0 or self.prewarm_ttl_s <= 0:
+                raise ValueError(
+                    f"scenario {self.name!r}: track_ttl_s and prewarm_ttl_s "
+                    f"must be positive")
+            if self.track_objects < 1:
+                raise ValueError(
+                    f"scenario {self.name!r}: track_objects="
+                    f"{self.track_objects} must be >= 1")
+            if self.track_distractors < 0:
+                raise ValueError(
+                    f"scenario {self.name!r}: track_distractors="
+                    f"{self.track_distractors} must be >= 0")
 
     @property
     def num_edges(self) -> int:
@@ -295,6 +344,13 @@ class Scenario:
         """Every declared query id (sorted); ``(0,)`` for the implicit
         single-query run."""
         return tuple(sorted(sp.query for sp in self.queries)) or (0,)
+
+    @property
+    def track_query_ids(self) -> Tuple[int, ...]:
+        """Declared cross-camera track queries (sorted; empty when the
+        scenario is classify-only)."""
+        return tuple(sorted(sp.query for sp in self.queries
+                            if sp.kind == "track"))
 
     def with_scheme(self, scheme: str) -> "Scenario":
         """Same scenario under another query scheme (validated in
@@ -387,6 +443,79 @@ def _query_substream(sc: Scenario, cams: List[SV.CameraSpec],
     return items
 
 
+def _track_substream(sc: Scenario, cams: List[SV.CameraSpec],
+                     rng: np.random.Generator, query: int,
+                     betas: Tuple[Tuple[float, float], Tuple[float, float]],
+                     t0: float, t1: float) -> List[Item]:
+    """One track query's detections: trajectory-aware ground truth.
+
+    Unlike ``_query_substream``'s memoryless Poisson clutter, a track
+    query's world is a set of PERSISTENT objects with stable identities:
+    ``sc.track_objects`` query-class targets plus ``sc.track_distractors``
+    non-query movers, each travelling at constant signed speed along a 1-D
+    chain of ``num_cameras`` camera fields (camera width
+    ``SV.CAMERA_FIELD_W`` px, wrapping at the ends).  Every scheduler tick
+    each object is observed once by whichever camera its world position
+    falls in, yielding an ``Item`` that carries
+
+    * ``gt_track`` — the object's stable id (the ID-switch metric's truth),
+    * ``emb`` — a unit re-ID embedding built from three orthogonal parts:
+      ``c*base[obj] + a*tint[camera] + b*noise``, where the per-camera
+      tints are orthonormal (QR) and each object's base is projected off
+      the tint subspace.  Same-camera re-observations then score
+      ``~c^2 + a^2`` cosine (clears the cold floor), cross-camera ones
+      ``~c^2`` (clears only the warm floor — the hand-off's whole value),
+      and distinct objects ``~0``,
+    * ``conf`` / ``is_query`` — the usual class-conditional Beta draw, so
+      the same items ride the classify cascade untouched.
+
+    All draws sit on the fixed (tick, object) grid before the lifetime
+    window masks them — windowing never shifts the rng stream.
+    """
+    (qa, qb), (oa, ob) = betas
+    C = sc.num_cameras
+    W = SV.CAMERA_FIELD_W
+    D = sc.embedding_dim
+    total = sc.track_objects + sc.track_distractors
+    ts = np.arange(0.0, sc.duration_s, sc.interval_s)              # (T,)
+    T = len(ts)
+    # per-object trajectory state
+    x0 = rng.uniform(0.0, C * W, total)
+    speed = rng.uniform(*sc.track_speed_px_s, total)
+    sign = np.where(rng.uniform(size=total) < 0.5, -1.0, 1.0)
+    vx = speed * sign
+    # per-camera appearance tints: orthonormal rows (needs D >= C, checked
+    # in __post_init__), so cross-camera interference is exactly zero
+    tint = np.linalg.qr(rng.normal(size=(D, C)))[0].T[:C]          # (C, D)
+    base = rng.normal(size=(total, D))
+    base -= (base @ tint.T) @ tint        # project off the tint subspace
+    base /= np.linalg.norm(base, axis=1, keepdims=True)
+    a_tint, b_noise = 0.30, 0.05
+    c_base = float(np.sqrt(1.0 - a_tint**2 - b_noise**2))
+    # fixed-grid draws: (T, total)
+    x = (x0[None, :] + vx[None, :] * ts[:, None]) % (C * W)
+    cam = (x // W).astype(np.int64)                                # (T, total)
+    jitter = rng.uniform(0.0, sc.interval_s, (T, total))
+    is_q = np.arange(total) < sc.track_objects
+    conf = np.where(is_q[None, :], rng.beta(qa, qb, (T, total)),
+                    rng.beta(oa, ob, (T, total)))
+    noise = rng.normal(size=(T, total, D))
+    noise /= np.linalg.norm(noise, axis=-1, keepdims=True)
+    emb = c_base * base[None] + a_tint * tint[cam] + b_noise * noise
+    emb /= np.linalg.norm(emb, axis=-1, keepdims=True)
+    t_arr = ts[:, None] + jitter
+    keep = (t_arr >= t0) & (t_arr < t1)
+    items: List[Item] = []
+    for k, o in zip(*np.nonzero(keep)):
+        cj = int(cam[k, o])
+        items.append(Item(
+            t_arrival=float(t_arr[k, o]), camera=cj,
+            edge_device=cj % sc.num_edges + 1,
+            conf=float(conf[k, o]), is_query=bool(is_q[o]), query=query,
+            emb=emb[k, o].astype(np.float32), gt_track=int(o)))
+    return items
+
+
 def synthetic_confidence_stream(sc: Scenario) -> List[Item]:
     """Model-free item stream: Poisson arrivals from the procedural camera
     fleet, edge confidence drawn from class-conditional Beta distributions
@@ -407,7 +536,9 @@ def synthetic_confidence_stream(sc: Scenario) -> List[Item]:
         items = []
         for sp in sorted(sc.queries, key=lambda s: s.query):
             t1 = sp.t_retire_s if sp.t_retire_s is not None else float("inf")
-            items.extend(_query_substream(
+            gen = _track_substream if sp.kind == "track" \
+                else _query_substream
+            items.extend(gen(
                 sc, cams, np.random.default_rng((sc.seed, 1001 + sp.query)),
                 sp.query, _SCHEME_BETAS[sp.train_scheme],
                 sp.t_arrive_s, t1))
@@ -735,6 +866,66 @@ def rush_hour(num_cameras: int = 8, num_edges: int = 3, **kw) -> Scenario:
         **kw)
 
 
+def vehicle_pursuit(num_cameras: int = 12, num_edges: int = 6,
+                    **kw) -> Scenario:
+    """Cross-camera pursuit: a handful of fast vehicles sweep a 12-camera
+    chain spread over 6 edges — consecutive cameras live on DIFFERENT
+    edges (camera j homes on edge j % 6 + 1), so every camera crossing is
+    an edge crossing and the predictive hand-off carries the whole
+    track-continuity story.
+
+    The track query's targets move at 24-48 px/s through 128 px camera
+    fields (~3-5 s dwell per camera, many crossings per run).  A crossing
+    lands the target on an edge that has never seen it: cold, the
+    similarity floor is ``track_thresholds[1]`` and only a same-camera
+    continuation clears it — the track fragments (an ID switch).  With
+    ``predictive_handoff`` the registry ships a pre-warm down the WAN the
+    moment the previous crossing reveals the direction, the next edge
+    accepts at the warm floor, and the track survives.  The committed
+    report pairs the default row with a ``surveiledge_no_handoff``
+    ablation so the gap is a gated number, not a story."""
+    duration = kw.pop("duration_s", 60.0)
+    queries = kw.pop("queries", (
+        QuerySpec(0, 0.0, None, "surveiledge", kind="track"),))
+    speeds = tuple(1.0 if i % 2 == 0 else 0.5 for i in range(num_edges))
+    return Scenario(name="vehicle_pursuit", edge_speeds=speeds,
+                    num_cameras=num_cameras, duration_s=duration,
+                    queries=queries,
+                    interval_s=kw.pop("interval_s", 0.5),
+                    track_objects=kw.pop("track_objects", 3),
+                    track_distractors=kw.pop("track_distractors", 1),
+                    track_speed_px_s=kw.pop("track_speed_px_s",
+                                            (24.0, 48.0)),
+                    train_step_s=kw.pop("train_step_s", duration / 1800.0),
+                    **kw)
+
+
+def crowd_flow(num_cameras: int = 8, num_edges: int = 4, **kw) -> Scenario:
+    """Dense pedestrian flow: many slow walkers (6-14 px/s — ~10-20 s
+    dwell per camera) under one track query, with a classify query riding
+    the same stream — the kinded API's mixed-workload scenario.  Crossings
+    are rarer than ``vehicle_pursuit``'s but the track table is much
+    bigger, so this preset stresses association breadth (every crop
+    against every live track, still ONE fused launch per tick) where
+    pursuit stresses hand-off timing."""
+    duration = kw.pop("duration_s", 45.0)
+    queries = kw.pop("queries", (
+        QuerySpec(0, 0.0, None, "surveiledge", kind="track"),
+        QuerySpec(1, 0.0, None, "no_finetune")))
+    speeds = tuple(1.0 if i % 2 == 0 else 0.5 for i in range(num_edges))
+    return Scenario(name="crowd_flow", edge_speeds=speeds,
+                    num_cameras=num_cameras, duration_s=duration,
+                    queries=queries,
+                    interval_s=kw.pop("interval_s", 0.5),
+                    track_objects=kw.pop("track_objects", 10),
+                    track_distractors=kw.pop("track_distractors", 4),
+                    track_speed_px_s=kw.pop("track_speed_px_s",
+                                            (6.0, 14.0)),
+                    track_ttl_s=kw.pop("track_ttl_s", 5.0),
+                    train_step_s=kw.pop("train_step_s", duration / 1800.0),
+                    **kw)
+
+
 def pixel_city(num_cameras: int = 12, num_edges: int = 4, **kw) -> Scenario:
     """Pixel-path operating point: the frames->query loop at a size the
     CPU-only interpret-mode kernels finish inside the CI smoke budget.
@@ -764,4 +955,6 @@ SCENARIOS: Dict[str, Callable[..., Scenario]] = {
     "query_churn": query_churn,
     "pixel_city": pixel_city,
     "rush_hour": rush_hour,
+    "vehicle_pursuit": vehicle_pursuit,
+    "crowd_flow": crowd_flow,
 }
